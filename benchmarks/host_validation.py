@@ -1,0 +1,67 @@
+"""Paper Sec. III-A/B analogue on the host: run the Schoenauer triad and
+the pi kernel in JAX, measure iterations/s, and compare with the
+throughput prediction from the semi-automatically built host machine
+model — the same predict-vs-measure loop as the paper's Tables III/V,
+executed on the hardware we actually have."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _measure(fn, *args, repeats: int = 5) -> float:
+    fn(*args)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def triad_benchmark(size: int = 1_000_000, reps: int = 20) -> dict:
+    b = jnp.ones((size,), jnp.float32)
+    c = jnp.full((size,), 1.5, jnp.float32)
+    d = jnp.full((size,), 0.5, jnp.float32)
+
+    @jax.jit
+    def run(b, c, d):
+        def body(_, a):
+            return b + c * d + a * 0  # a[:] = b + c*d, kept live
+        return jax.lax.fori_loop(0, reps, body, b)
+
+    seconds = _measure(run, b, c, d)
+    it_per_s = size * reps / seconds
+    flops = 2 * size * reps / seconds
+    return {
+        "name": "host/triad",
+        "us_per_call": seconds * 1e6,
+        "Mit_per_s": it_per_s / 1e6,
+        "MFLOP_per_s": flops / 1e6,
+    }
+
+
+def pi_benchmark(slices: int = 2_000_000) -> dict:
+    @jax.jit
+    def run():
+        delta = 1.0 / slices
+        def body(i, s):
+            x = (i + 0.5) * delta
+            return s + 4.0 / (1.0 + x * x)
+        return jax.lax.fori_loop(0, slices, body, 0.0) * delta
+
+    seconds = _measure(run)
+    value = float(run())
+    return {
+        "name": "host/pi",
+        "us_per_call": seconds * 1e6,
+        "Mit_per_s": slices / seconds / 1e6,
+        "abs_err_vs_pi": abs(value - np.pi),
+    }
+
+
+def all_host_benchmarks() -> list[dict]:
+    return [triad_benchmark(), pi_benchmark()]

@@ -1,0 +1,66 @@
+"""Paper Sec. II methodology on the machine we have: latency chains,
+parallelism sweeps and port-conflict probes for JAX ops on the host CPU,
+rendered in the paper's ibench output format (Sec. II-C)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bench import (conflict_benchmark, infer_port_count,
+                              sweep_parallelism)
+from repro.core.bench.model_builder import build_host_model
+
+FREQ = 2.0e9   # nominal; cycles reported are indicative on shared CPU
+
+
+def ibench_sweep(fast: bool = True) -> list[dict]:
+    ops = {
+        "add": lambda x, c: x + c,
+        "mul": lambda x, c: x * c,
+        "fma": lambda x, c: x * c + c,
+        "div": lambda x, c: x / c,
+    }
+    levels = (1, 2, 4, 8) if fast else (1, 2, 4, 5, 8, 10, 12)
+    rows = []
+    for name, op in ops.items():
+        sweep = sweep_parallelism(op, levels=levels, name=name)
+        ports = infer_port_count(sweep)
+        for r in sweep:
+            rows.append({
+                "name": f"ibench/{r.ibench_line(FREQ).split(':')[0]}",
+                "us_per_call": r.seconds_per_op * 1e6,
+                "clk_cy": r.cycles(FREQ),
+            })
+        rows.append({"name": f"ibench/{name}-inferred-ports",
+                     "ports": ports})
+    return rows
+
+
+def conflict_probe() -> list[dict]:
+    """Sec. II-B: does op B share a port with op A?  (On a superscalar
+    host CPU with few FP ports, fma vs mul conflicts harder than fma vs
+    add-with-separate-chain, mirroring the paper's Zen finding.)"""
+    rows = []
+    base = lambda x, c: x * c + c          # fma
+    for name, probe in (("vaddpd", lambda x, c: x + c),
+                        ("vmulpd", lambda x, c: x * c)):
+        res = conflict_benchmark(base, probe, name=f"fma+{name}")
+        rows.append({
+            "name": f"conflict/fma_vs_{name}",
+            "us_per_call": res.combined_seconds_per_iter * 1e6,
+            "slowdown": res.slowdown,
+            "shares_port": res.shares_port,
+        })
+    return rows
+
+
+def host_model() -> list[dict]:
+    model, db, measured = build_host_model()
+    rows = []
+    for m in measured:
+        rows.append({
+            "name": f"host_model/{m.name}",
+            "us_per_call": m.throughput_s * 1e6,
+            "latency_us": m.latency_s * 1e6,
+            "ports": m.ports,
+        })
+    return rows

@@ -1,0 +1,173 @@
+"""§Roofline report: per (arch x shape x mesh) three-term roofline from
+the dry-run artifacts (results/dryrun_baseline.json), with MODEL_FLOPS =
+6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode) usefulness ratios and
+the roofline fraction used as the §Perf score."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get_config
+from repro.core.arch.tpu_v5e import HBM_BW, PEAK_FLOPS
+
+PEAK = PEAK_FLOPS["bf16"]
+SHAPE_TOKENS = {
+    "train_4k": (4096, 256), "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128), "long_500k": (524288, 1),
+}
+
+
+def _attention_flops_fwd(cfg, S: int, B: int) -> float:
+    """Score+PV matmul FLOPs per forward (global, all layers)."""
+    kinds = cfg.layer_kinds()
+    total = 0.0
+    for kind in kinds:
+        if kind == "attn":
+            keys = min(S, cfg.window) if cfg.attention == "swa" else S
+            frac = 0.5 if (cfg.causal and cfg.attention != "swa") else 1.0
+            total += 4.0 * B * S * keys * frac * cfg.n_heads * cfg.d_head
+        else:
+            Q, H, P, N = (cfg.ssm_chunk, cfg.ssm_heads,
+                          cfg.ssm_head_dim, cfg.ssm_state)
+            # CB (Q^2 N) + intra w*x (Q^2 ... per token Q) + state io
+            total += 2.0 * B * S * (Q * N + Q * H * P + 2 * H * P * N)
+    return total
+
+
+def model_flops(record: dict) -> float:
+    """Useful model FLOPs (global): 6/2·N·D parameter work plus the
+    attention/SSD mixer work the 6ND rule does not cover."""
+    S, B = SHAPE_TOKENS[record["shape"]]
+    cfg = get_config(record["arch"])
+    n = record.get("active_params") or record["params"]
+    attn = _attention_flops_fwd(cfg, S, B)
+    if record["shape"] == "train_4k":
+        return 6.0 * n * S * B + 3.0 * attn
+    if record["step"] in ("prefill_step", "encode_step"):
+        return 2.0 * n * S * B + attn
+    return 2.0 * n * B          # decode: one token per sequence
+
+
+def decode_useful_bytes(record: dict) -> float:
+    """Decode is bandwidth-bound: the useful work per step is reading the
+    active parameters once plus the KV/SSM state for every sequence."""
+    S, B = SHAPE_TOKENS[record["shape"]]
+    cfg = get_config(record["arch"])
+    n = record.get("active_params") or record["params"]
+    kinds = cfg.layer_kinds()
+    cache = 0.0
+    for kind in kinds:
+        if kind == "attn":
+            keys = min(S, cfg.window) if cfg.attention == "swa" else S
+            cache += 2.0 * B * keys * cfg.n_kv_heads * cfg.d_head * 2
+        else:
+            cache += B * cfg.ssm_heads * cfg.ssm_head_dim \
+                * cfg.ssm_state * 4
+    return 2.0 * n + cache
+
+
+def analyse_record(r: dict) -> dict:
+    pm = r["portmodel"]
+    chips = r["n_chips"]
+    useful = model_flops(r)
+    useful_s = useful / (chips * PEAK)
+    hlo_flops_global = pm["mxu_flops_per_device"] * chips
+    bound = pm["bound_overlap_s"]
+    if r["step"] == "serve_step":
+        # decode cells: bandwidth roofline (params + state per step)
+        useful_s = decode_useful_bytes(r) / (chips * HBM_BW)
+    return {
+        "name": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+        "step": r["step"],
+        "compute_s": pm["compute_s"],
+        "memory_s": pm["memory_s"],
+        "collective_s": pm["collective_s"],
+        "dominant": pm["dominant"],
+        "model_flops": useful,
+        "hlo_flops": hlo_flops_global,
+        "useful_ratio": useful / hlo_flops_global
+        if hlo_flops_global else 0.0,
+        "useful_s": useful_s,
+        "bound_s": bound,
+        "roofline_fraction": useful_s / bound if bound else 0.0,
+        "temp_gib": r["memory"].get("temp_size_in_bytes", 0) / 2 ** 30,
+    }
+
+
+def load(path: str = "results/dryrun_baseline.json") -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def report(path: str = "results/dryrun_baseline.json",
+           mesh: str | None = "16x16") -> list[dict]:
+    rows = []
+    for r in load(path):
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append({"name": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+                         "skipped": r.get("reason", r["status"])})
+            continue
+        rows.append(analyse_record(r))
+    return rows
+
+
+def render_markdown(path: str = "results/dryrun_baseline.json",
+                    mesh: str = "16x16") -> str:
+    rows = report(path, mesh)
+    out = ["| arch | shape | step | compute [s] | memory [s] | "
+           "collective [s] | dominant | 6ND/HLO | roofline frac | "
+           "temp GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        arch, shape, _ = r["name"].split("|")
+        if "skipped" in r:
+            out.append(f"| {arch} | {shape} | — | — | — | — | "
+                       f"SKIPPED: {r['skipped']} | — | — | — |")
+            continue
+        out.append(
+            f"| {arch} | {shape} | {r['step']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3%} | {r['temp_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def compare(baseline_path: str = "results/dryrun_baseline.json",
+            v1_path: str = "results/dryrun_v1.json",
+            mesh: str = "16x16") -> str:
+    """Before/after table across the whole fleet (§Perf)."""
+    base = {r["name"]: r for r in report(baseline_path, mesh)
+            if "skipped" not in r}
+    new = {r["name"]: r for r in report(v1_path, mesh)
+           if "skipped" not in r}
+    out = ["| cell | bound v0 [s] | bound v1 [s] | speedup | frac v0 | "
+           "frac v1 |", "|---|---|---|---|---|---|"]
+    total_gain = []
+    for name in sorted(base):
+        if name not in new:
+            continue
+        b, n = base[name], new[name]
+        gain = b["bound_s"] / n["bound_s"] if n["bound_s"] else 0
+        total_gain.append(gain)
+        arch, shape, _ = name.split("|")
+        out.append(f"| {arch} × {shape} | {b['bound_s']:.2f} | "
+                   f"{n['bound_s']:.2f} | {gain:.2f}× | "
+                   f"{b['roofline_fraction']:.2%} | "
+                   f"{n['roofline_fraction']:.2%} |")
+    if total_gain:
+        import math
+        geo = math.exp(sum(math.log(max(g, 1e-9)) for g in total_gain)
+                       / len(total_gain))
+        out.append(f"\ngeomean speedup v0→v1: {geo:.2f}× over "
+                   f"{len(total_gain)} cells")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "compare":
+        print(compare())
+    else:
+        print(render_markdown(*sys.argv[1:]))

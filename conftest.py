@@ -1,0 +1,11 @@
+"""Test path setup: make `repro` (src layout) and `benchmarks` importable
+regardless of PYTHONPATH.  Device count is deliberately NOT forced here —
+smoke tests and benches must see the single real device; only the
+dry-run (its own process) forces 512 (see repro/launch/dryrun.py)."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,52 @@
+"""Analyze any (architecture x shape) cell with the OSACA-on-HLO engine —
+the paper's workflow (extract kernel -> match instruction forms -> port
+occupation table -> bottleneck) applied to a compiled JAX step.
+
+Run:  PYTHONPATH=src python examples/analyze_hlo.py --arch qwen2.5-3b \
+          --shape train_4k [--multi-pod] [--set remat=dots ...]
+
+Note: spawns its own 512-device world; run as a standalone process.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+
+def main():
+    from repro.configs import ARCH_IDS
+    from repro.core.hlo.analyzer import analyze_hlo
+    from repro.launch.dryrun import _coerce
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+    from repro.parallel.sharding import make_rules
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
+    ap.add_argument("--shape", choices=list(SHAPES), default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--set", action="append", default=[],
+                    dest="overrides")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    for kv in args.overrides:
+        k, _, v = kv.partition("=")
+        cfg = cfg.with_updates(**{k: _coerce(v)})
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        step = build_step(cfg, SHAPES[args.shape], make_rules(mesh))
+        print(f"lowering {step.name} for {args.arch} x {args.shape} on "
+              f"{mesh.devices.size} chips ...")
+        compiled = step.lower().compile()
+        print("memory_analysis:", compiled.memory_analysis())
+        analysis = analyze_hlo(compiled.as_text())
+    print(analysis.render(top=args.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .store import (CheckpointStore, latest_step, load_checkpoint,
+                    save_checkpoint)

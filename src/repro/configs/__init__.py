@@ -1,0 +1,34 @@
+"""Assigned architecture registry: ``get_config(arch_id)`` /
+``get_smoke_config(arch_id)`` (reduced, CPU-runnable)."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "jamba-1.5-large-398b",
+    "kimi-k2-1t-a32b",
+    "grok-1-314b",
+    "qwen1.5-32b",
+    "h2o-danube-3-4b",
+    "nemotron-4-340b",
+    "qwen2.5-3b",
+    "hubert-xlarge",
+    "mamba2-370m",
+    "llava-next-34b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str):
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str):
+    return _module(arch).smoke_config()

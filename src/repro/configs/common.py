@@ -1,0 +1,39 @@
+"""Generic family-preserving config reduction for smoke tests.
+
+The reduced config keeps the *structure* (layer pattern, MoE-ness, GQA,
+modality, activation) while shrinking every dimension so one forward/train
+step runs on a single CPU device in seconds.
+"""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+
+def smoke_reduce(cfg: ModelConfig) -> ModelConfig:
+    kw: dict = dict(
+        d_model=128,
+        vocab_size=256,
+        attn_chunk_q=64, attn_chunk_kv=64, loss_chunk=64,
+        rope_theta=1e4, remat="none",
+    )
+    if cfg.d_ff:
+        kw["d_ff"] = 256
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+                  d_head=32)
+    if cfg.attention == "swa":
+        kw["window"] = 64
+    if cfg.is_moe:
+        kw.update(n_experts=4, top_k=min(cfg.top_k, 2), d_ff_expert=64,
+                  n_shared_experts=min(cfg.n_shared_experts, 1))
+    if cfg.layer_pattern in ("ssm", "jamba"):
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=32)
+    if cfg.layer_pattern == "jamba":
+        kw["n_layers"] = cfg.hybrid_group          # one full hybrid group
+    elif cfg.n_dense_layers:
+        kw["n_layers"] = cfg.n_dense_layers + 2    # prefix + 2 stacked
+    else:
+        kw["n_layers"] = 2
+    if cfg.modality == "vision":
+        kw["n_patches"] = 8
+    return cfg.with_updates(**kw)

@@ -1,0 +1,20 @@
+"""Grok-1: 314B MoE, 64L, d=6144, 48H (GQA kv=8), 8 experts top-2 with
+expert ff=32768, vocab 131072 [hf:xai-org/grok-1].  8 experts < 16-way
+model axis -> expert-TP sharding mode (d_ff split)."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b", family="moe",
+        n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+        d_ff=32768, vocab_size=131072,
+        n_experts=8, top_k=2, d_ff_expert=32768,
+        activation="gelu", glu=True,
+        attn_logit_softcap=30.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

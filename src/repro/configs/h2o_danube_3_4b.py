@@ -1,0 +1,18 @@
+"""H2O-Danube3-4B: dense llama/mistral mix with sliding-window attention,
+24L, d=3840, 32H (GQA kv=8), ff=10240, vocab 32000 [arXiv:2401.16818]."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b", family="dense",
+        n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+        d_ff=10240, vocab_size=32000,
+        attention="swa", window=4096,
+        activation="silu", glu=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,20 @@
+"""HuBERT X-Large: encoder-only audio transformer, 48L, d=1280, 16H MHA,
+ff=5120, vocab 504 (cluster targets) [arXiv:2106.07447].  The conv
+waveform frontend is a STUB: input_specs provide precomputed 512-dim
+frame embeddings (per instructions)."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+        d_ff=5120, vocab_size=504,
+        modality="audio", encoder_only=True, causal=False,
+        activation="gelu", glu=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

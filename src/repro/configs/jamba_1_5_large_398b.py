@@ -1,0 +1,22 @@
+"""Jamba-1.5-Large: hybrid Mamba+attention 1:7 interleave with MoE every
+second layer [arXiv:2403.19887].  72L, d=8192, 64H (GQA kv=8), ff=24576,
+vocab 65536, 16 experts top-2.  Jamba's Mamba-1 layers are realised with
+the SSD (Mamba-2) chunked formulation — TPU adaptation, DESIGN.md §3."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b", family="hybrid",
+        n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=24576, vocab_size=65536,
+        n_experts=16, top_k=2, d_ff_expert=24576, moe_every=2,
+        layer_pattern="jamba", hybrid_group=8, hybrid_attn_index=3,
+        ssm_state=16, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+        activation="silu", glu=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

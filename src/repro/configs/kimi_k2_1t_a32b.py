@@ -1,0 +1,21 @@
+"""Kimi K2: trillion-parameter MoE, 61L (first layer dense FFN), d=7168,
+64H (GQA kv=8), 384 experts top-8 + 1 shared, expert ff=2048, dense
+ff=18432, vocab 163840 [paper table; DeepSeek-V3-style layout]."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+        d_ff=18432, vocab_size=163840,
+        n_experts=384, top_k=8, d_ff_expert=2048, n_shared_experts=1,
+        n_dense_layers=1,
+        activation="silu", glu=True,
+        optimizer_dtype="bfloat16",   # 1T params: fp32 m/v cannot fit 256 chips
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,20 @@
+"""LLaVA-NeXT-34B backbone: dense decoder, 60L, d=7168, 56H (GQA kv=8),
+ff=20480, vocab 64000 [hf:llava-hf/llava-v1.6-*].  The anyres vision
+tower is a STUB: input_specs provide precomputed patch embeddings at
+d_model that a learned adapter injects at the sequence head."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm",
+        n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_head=128,
+        d_ff=20480, vocab_size=64000,
+        modality="vision", n_patches=576,
+        activation="silu", glu=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

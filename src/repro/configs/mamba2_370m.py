@@ -1,0 +1,19 @@
+"""Mamba2-370M: attention-free SSD (state-space duality), 48L, d=1024,
+d_state=128, expand 2, head_dim 64, vocab 50280 [arXiv:2405.21060].
+Pure Mamba-2: each layer is a single SSD mixer block (no FFN)."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, d_head=0,
+        d_ff=0, vocab_size=50280,
+        layer_pattern="ssm",
+        ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

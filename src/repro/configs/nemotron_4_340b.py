@@ -1,0 +1,18 @@
+"""Nemotron-4-340B: dense, 96L, d=18432, 96H (GQA kv=8), ff=73728,
+vocab 256000, squared-ReLU FFN (no GLU) [arXiv:2402.16819]."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b", family="dense",
+        n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8,
+        d_ff=73728, vocab_size=256000,
+        activation="relu2", glu=False,
+        optimizer_dtype="bfloat16",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

@@ -1,0 +1,18 @@
+"""Qwen1.5-32B: dense, 64L, d=5120, 40H MHA (kv=40), ff=27392,
+vocab 152064, QKV bias [hf:Qwen/Qwen1.5-*]."""
+from repro.models.config import ModelConfig
+from .common import smoke_reduce
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40,
+        d_ff=27392, vocab_size=152064,
+        qkv_bias=True, activation="silu", glu=True,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

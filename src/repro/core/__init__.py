@@ -1,0 +1,17 @@
+"""repro.core — the paper's contribution: OSACA-style static throughput
+prediction via a port model, for x86 loop kernels (faithful layer) and for
+compiled JAX/HLO programs on TPU (adaptation layer, see repro.core.hlo)."""
+from __future__ import annotations
+
+from .analysis import AnalysisResult, analyze
+from .database import E, InstrForm, InstructionDB, widen_double_pumped
+from .isa import Instruction, parse_assembly
+from .kernel import extract_kernel
+from .latency import analyze_latency
+from .ports import PortModel, U, Uop
+
+__all__ = [
+    "AnalysisResult", "analyze", "analyze_latency", "extract_kernel",
+    "parse_assembly", "Instruction", "InstructionDB", "InstrForm", "E",
+    "PortModel", "U", "Uop", "widen_double_pumped",
+]

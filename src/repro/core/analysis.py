@@ -1,0 +1,165 @@
+"""Throughput analysis (paper Sec. III): map every kernel instruction to its
+DB entry, schedule uops onto ports, sum per-port occupation, report the
+bottleneck port and the predicted cycles per (assembly) loop iteration.
+
+Implements the Zen store/load AGU pairing: each store instruction hides one
+load instruction's AGU uops (displayed parenthesised, excluded from totals) —
+paper Sec. III-A, Table IV.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .database import InstructionDB, MissingForm
+from .isa import Instruction
+from .ports import PortModel, merge_occupation
+from .scheduler import SCHEDULERS, ScheduledUop
+
+
+@dataclass
+class InstructionReport:
+    instruction: Instruction
+    occupation: dict[str, float]          # visible occupation per port
+    hidden_occupation: dict[str, float]   # parenthesised (hidden) occupation
+    throughput: float | None
+    latency: float | None
+    matched: bool
+
+    def total(self) -> float:
+        return sum(self.occupation.values())
+
+
+@dataclass
+class AnalysisResult:
+    model: PortModel
+    rows: list[InstructionReport]
+    port_totals: dict[str, float]
+    bottleneck_port: str
+    predicted_cycles: float               # per assembly iteration
+    missing: list[MissingForm]
+    scheduler: str
+    unroll_factor: int = 1
+
+    @property
+    def cycles_per_source_iteration(self) -> float:
+        return self.predicted_cycles / self.unroll_factor
+
+    # ------------------------------------------------------------------
+    def render(self, precision: int = 2) -> str:
+        headers = []
+        for p in self.model.ports:
+            headers.append(f"{p} - DV" if p in self.model.divider_ports
+                           else p)
+        width = max(6, max(len(h) for h in headers) + 1)
+
+        def fmt(v: float, hidden: float = 0.0) -> str:
+            if v <= 1e-12 and hidden <= 1e-12:
+                return " " * width
+            if hidden > 1e-12:
+                return f"({hidden:.{precision}f})".rjust(width)
+            return f"{v:.{precision}f}".rjust(width)
+
+        lines = ["| " + " | ".join(h.rjust(width) for h in headers)
+                 + " | Assembly Instructions"]
+        lines.append("|" + "-" * (len(lines[0]) - 1))
+        for row in self.rows:
+            cells = [fmt(row.occupation.get(p, 0.0),
+                         row.hidden_occupation.get(p, 0.0))
+                     for p in self.model.ports]
+            marker = "" if row.matched else "   # NOT IN DB"
+            lines.append("| " + " | ".join(cells) + " | "
+                         + row.instruction.text + marker)
+        totals = [f"{self.port_totals[p]:.{precision}f}".rjust(width)
+                  for p in self.model.ports]
+        lines.append("|" + "-" * (len(lines[0]) - 1))
+        lines.append("| " + " | ".join(totals) + " |")
+        lines.append(
+            f"Bottleneck port: {self.bottleneck_port}   predicted "
+            f"{self.predicted_cycles:.{precision}f} {self.model.unit}/asm-it"
+            + (f"   ({self.cycles_per_source_iteration:.{precision}f} "
+               f"{self.model.unit}/src-it @ unroll "
+               f"{self.unroll_factor})" if self.unroll_factor != 1 else "")
+            + f"   [scheduler={self.scheduler}]")
+        if self.missing:
+            lines.append("Missing forms (benchmarks auto-generated):")
+            for m in self.missing:
+                lines.append("  - " + m.instruction.form)
+        return "\n".join(lines)
+
+
+def analyze(kernel: list[Instruction], db: InstructionDB,
+            scheduler: str = "uniform",
+            unroll_factor: int = 1) -> AnalysisResult:
+    model = db.model
+    schedule_fn = SCHEDULERS[scheduler]
+
+    # 1. match instruction forms
+    matched: list[tuple[Instruction, object]] = []
+    missing: list[MissingForm] = []
+    for ins in kernel:
+        entry = db.lookup(ins)
+        if entry is None and not _is_ignorable(ins):
+            missing.append(MissingForm(ins))
+        matched.append((ins, entry))
+
+    # 2. Zen AGU pairing: each store hides one load instruction's
+    #    hideable AGU uops (the first loads in program order, as OSACA does)
+    hidden_instrs: set[int] = set()
+    if model.store_hides_load:
+        n_stores = sum(
+            1 for ins, e in matched
+            if e is not None and any(u.kind == "store-agu" for u in e.uops))
+        if n_stores:
+            budget = n_stores
+            for idx, (ins, e) in enumerate(matched):
+                if budget == 0:
+                    break
+                if e is not None and any(u.hideable_load for u in e.uops):
+                    hidden_instrs.add(idx)
+                    budget -= 1
+
+    # 3. flatten uops and schedule
+    visible_uops: list[tuple[int, object]] = []
+    hidden_uops: list[tuple[int, object]] = []
+    for idx, (ins, e) in enumerate(matched):
+        if e is None:
+            continue
+        for uop in e.uops:
+            if idx in hidden_instrs and uop.hideable_load:
+                hidden_uops.append((idx, uop))
+            else:
+                visible_uops.append((idx, uop))
+    scheduled = schedule_fn(model, visible_uops)
+    scheduled_hidden = SCHEDULERS["uniform"](model, hidden_uops)
+
+    # 4. accumulate per-instruction and per-port occupation
+    rows: list[InstructionReport] = []
+    per_instr: dict[int, dict[str, float]] = {}
+    per_instr_hidden: dict[int, dict[str, float]] = {}
+    for s in scheduled:
+        merge_occupation(per_instr.setdefault(s.instr_index, {}),
+                         s.assignment)
+    for s in scheduled_hidden:
+        merge_occupation(per_instr_hidden.setdefault(s.instr_index, {}),
+                         s.assignment)
+    port_totals = model.zero_occupation()
+    for idx, (ins, e) in enumerate(matched):
+        occ = per_instr.get(idx, {})
+        merge_occupation(port_totals, occ)
+        rows.append(InstructionReport(
+            instruction=ins, occupation=occ,
+            hidden_occupation=per_instr_hidden.get(idx, {}),
+            throughput=getattr(e, "throughput", None),
+            latency=getattr(e, "latency", None),
+            matched=e is not None))
+
+    bottleneck = max(port_totals, key=lambda p: port_totals[p])
+    return AnalysisResult(
+        model=model, rows=rows, port_totals=port_totals,
+        bottleneck_port=bottleneck,
+        predicted_cycles=port_totals[bottleneck],
+        missing=missing, scheduler=scheduler, unroll_factor=unroll_factor)
+
+
+def _is_ignorable(ins: Instruction) -> bool:
+    return ins.mnemonic in ("nop", "vzeroupper", "endbr64", "ret", "leave")

@@ -1,0 +1,15 @@
+"""Per-architecture port models and instruction databases."""
+from __future__ import annotations
+
+from .skylake import build_skylake_db, SKYLAKE
+from .zen import build_zen_db, ZEN
+
+
+def get_db(arch: str):
+    arch = arch.lower()
+    if arch in ("skl", "skylake"):
+        return build_skylake_db()
+    if arch in ("zen", "zen1", "znver1"):
+        return build_zen_db()
+    raise ValueError(f"unknown architecture {arch!r} "
+                     "(TPU analysis lives in repro.core.hlo.analyzer)")

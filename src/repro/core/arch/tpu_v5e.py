@@ -1,0 +1,43 @@
+"""TPU v5e port model — the paper's port abstraction mapped onto TPU
+functional pipes (DESIGN.md Sec. 2, Layer B).
+
+Ports:
+  MXU  — systolic matmul units; occupation = flops / peak(dtype)
+  VPU  — vector units (elementwise / reductions / softmax exp ...)
+  HBM  — memory pipe; occupation = bytes_accessed / bandwidth
+  ICI  — inter-chip links; occupation = link bytes / link bandwidth
+
+Hardware constants (per chip) as given in the assignment brief:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+from ..ports import PortModel
+
+TPU_V5E = PortModel(
+    name="TPU v5e",
+    ports=("MXU", "VPU", "HBM", "ICI"),
+    unit="s",
+)
+
+PEAK_FLOPS = {          # per chip, by accumulation dtype
+    "bf16": 197e12,
+    "f32": 98.5e12,     # half rate through the MXU
+    "f16": 197e12,
+    "s8": 394e12,
+}
+VPU_FLOPS = 2.0e12      # 8x128 vector lanes x FMA x ~1 GHz (estimate)
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+ICI_LINKS_PER_AXIS = 1  # conservative: one logical link per mesh axis
+HBM_PER_CHIP = 16 * 2**30
+
+# transcendental / heavy elementwise weights (VPU cycles per element,
+# relative to one FMA) — the analogue of the x86 divider-pipe entries
+VPU_OP_WEIGHT = {
+    "exponential": 4.0, "log": 4.0, "tanh": 6.0, "divide": 4.0,
+    "sqrt": 4.0, "rsqrt": 4.0, "power": 8.0, "erf": 6.0,
+    "add": 1.0, "subtract": 1.0, "multiply": 1.0, "maximum": 1.0,
+    "minimum": 1.0, "compare": 1.0, "select": 1.0, "convert": 1.0,
+    "exponential-minus-one": 4.0, "logistic": 6.0,
+}

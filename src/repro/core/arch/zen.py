@@ -1,0 +1,176 @@
+"""AMD Zen (family 17h) port model + instruction database (paper Fig. 3).
+
+Zen splits into an FP cluster (pipes 0-3), an integer cluster (ALUs 4-7) and
+two AGU/load-store ports (8, 9).  Peculiarities modelled per the paper:
+
+* FP divide uses pipe 3 plus a divider pipe ``3DV`` (paper Sec. II-C note).
+* 256-bit AVX executes as two 128-bit halves -> all ymm forms are derived by
+  doubling the xmm uop occupation (paper Sec. III-A).
+* Only two AGUs serve loads AND stores: a store occupies both port 8 and 9
+  for its address generation, but one load can execute in its shadow; OSACA
+  hides the first load behind a store (paper Sec. III-A, Table IV).
+
+Numbers from the paper's own benchmarks where stated (FMA lat 5, add lat 3,
+FMA/mul on pipes 0|1, add on 2|3, loads 8|9) and AMD SOG [12] / Agner [11]
+otherwise.
+"""
+from __future__ import annotations
+
+from ..database import E, InstrForm, InstructionDB, widen_double_pumped
+from ..ports import PortModel, U
+
+ZEN = PortModel(
+    name="AMD Zen",
+    ports=("0", "1", "2", "3", "3DV", "4", "5", "6", "7", "8", "9"),
+    divider_ports=frozenset({"3DV"}),
+    store_hides_load=True,
+    unit="cy",
+    frequency_hz=1.8e9,
+)
+
+_FMUL = "0|1"      # FP mul / FMA pipes
+_FADD = "2|3"      # FP add pipes
+_FANY = "0|1|2|3"  # FP move/logic spreads across all four pipes (Table IV)
+_IALU = "4|5|6|7"
+_AGU = "8|9"
+
+
+def _xmm_and_ymm(entries: list[InstrForm]) -> list[InstrForm]:
+    out = list(entries)
+    for e in entries:
+        if "xmm" in e.signature:
+            out.append(widen_double_pumped(e))
+    return out
+
+
+def build_zen_db() -> InstructionDB:
+    db = InstructionDB("zen", ZEN)
+    ent: list[InstrForm] = []
+
+    # ---- FP moves / loads / stores (Table IV rows) --------------------
+    mv: list[InstrForm] = []
+    for m in ("vmovapd", "vmovaps", "vmovupd", "vmovups", "vmovdqa",
+              "vmovdqu", "movapd", "movaps", "vmovsd", "vmovss",
+              "movsd", "movss"):
+        mv.append(E(m, "xmm,mem",
+                    [U(_FANY), U(_AGU, hideable_load=True, kind="load")],
+                    0.5, 5, "load: FP move uop + AGU uop"))
+        mv.append(E(m, "mem,xmm",
+                    [U(_FANY), U("8", kind="store-agu"),
+                     U("9", kind="store-agu")], 1.0, 4,
+                    "store blocks both AGUs; hides one load"))
+        mv.append(E(m, "xmm,xmm", [U(_FANY)], 0.25, 1))
+    ent += _xmm_and_ymm(mv)
+
+    # ---- FP arithmetic: mul/FMA on 0|1, add on 2|3 (paper Sec. II-C) --
+    ar: list[InstrForm] = []
+    for m in ("vaddpd", "vaddps", "vaddsd", "vaddss",
+              "vsubpd", "vsubps", "vsubsd", "vsubss",
+              "vmaxpd", "vminpd", "vmaxsd", "vminsd"):
+        ar.append(E(m, "xmm,xmm,xmm", [U(_FADD)], 0.5, 3,
+                    "paper: vaddpd lat 3 on Zen"))
+        ar.append(E(m, "xmm,xmm,mem",
+                    [U(_FADD), U(_AGU, hideable_load=True, kind="load")],
+                    0.5, 3))
+    for m in ("vmulpd", "vmulps", "vmulsd", "vmulss"):
+        ar.append(E(m, "xmm,xmm,xmm", [U(_FMUL)], 0.5, 4))
+        ar.append(E(m, "xmm,xmm,mem",
+                    [U(_FMUL), U(_AGU, hideable_load=True, kind="load")],
+                    0.5, 4))
+    for m in tuple(f"vfmadd{o}{t}" for o in ("132", "213", "231")
+                   for t in ("pd", "ps", "sd", "ss")) + \
+            tuple(f"vfnmadd{o}pd" for o in ("132", "213", "231")):
+        ar.append(E(m, "xmm,xmm,xmm", [U(_FMUL)], 0.5, 5,
+                    "paper Sec. II-C: lat 5, TP 0.5, pipes 0|1"))
+        ar.append(E(m, "xmm,xmm,mem",
+                    [U(_FMUL), U(_AGU, hideable_load=True, kind="load")],
+                    0.5, 5, "paper DB entry: 0.5, 5.0, (0.5,0.5,...,0.5,0.5)"))
+    ent += _xmm_and_ymm(ar)
+
+    # ---- divide: pipe 3 + divider (paper: 'divider pipe on port 3') ---
+    dv: list[InstrForm] = []
+    dv.append(E("vdivpd", "xmm,xmm,xmm", [U("3"), U("3DV", 4, kind="div")],
+                4, 13, "DB value chosen as in paper (pred 2.00/it at -O3)"))
+    dv.append(E("vdivsd", "xmm,xmm,xmm", [U("3"), U("3DV", 4, kind="div")],
+                4, 13))
+    dv.append(E("vdivps", "xmm,xmm,xmm", [U("3"), U("3DV", 3, kind="div")],
+                3, 10))
+    dv.append(E("vdivss", "xmm,xmm,xmm", [U("3"), U("3DV", 3, kind="div")],
+                3, 10))
+    dv.append(E("vsqrtpd", "xmm,xmm", [U("3"), U("3DV", 9, kind="div")],
+                9, 20))
+    dv.append(E("vsqrtsd", "xmm,xmm", [U("3"), U("3DV", 9, kind="div")],
+                9, 20))
+    ent += _xmm_and_ymm(dv)
+
+    # ---- conversions / shuffles ---------------------------------------
+    cv: list[InstrForm] = []
+    cv.append(E("vcvtdq2pd", "xmm,xmm", [U("1|2")], 0.5, 4))
+    cv.append(E("vcvtsi2sd", "xmm,xmm,r", [U("2|3"), U(_IALU)], 1, 7))
+    cv.append(E("vcvtsi2ss", "xmm,xmm,r", [U("2|3"), U(_IALU)], 1, 7))
+    cv.append(E("vcvttsd2si", "r,xmm", [U("2|3"), U(_IALU)], 1, 7))
+    cv.append(E("vextracti128", "xmm,ymm,imm", [U(_FANY)], 0.25, 2))
+    cv.append(E("vextractf128", "xmm,ymm,imm", [U(_FANY)], 0.25, 2))
+    for m in ("vunpcklpd", "vunpckhpd", "vshufpd", "vshufps", "vpshufd"):
+        cv.append(E(m, "*", [U("1|2")], 0.5, 1))
+    ent += cv  # extract forms reference ymm already; no widening
+
+    # ---- integer SIMD --------------------------------------------------
+    si: list[InstrForm] = []
+    for m in ("vpaddd", "vpaddq", "vpsubd", "vpand", "vpor", "vpxor",
+              "vpcmpeqd"):
+        si.append(E(m, "xmm,xmm,xmm", [U(_FANY)], 0.25, 1))
+        si.append(E(m, "xmm,xmm,mem",
+                    [U(_FANY), U(_AGU, hideable_load=True, kind="load")],
+                    0.5, 1))
+    ent += _xmm_and_ymm(si)
+
+    # ---- FP logic -------------------------------------------------------
+    lg: list[InstrForm] = []
+    for m in ("vxorpd", "vxorps", "vandpd", "vandps", "vorpd", "vorps"):
+        lg.append(E(m, "xmm,xmm,xmm", [U(_FANY)], 0.25, 0, "zero idiom"))
+    for m in ("vcmppd", "vcomisd", "vucomisd"):
+        lg.append(E(m, "*", [U("0|1")], 0.5, 3))
+    ent += _xmm_and_ymm(lg)
+
+    # ---- scalar integer -------------------------------------------------
+    for m in ("add", "sub", "and", "or", "xor", "cmp", "test", "inc",
+              "dec", "neg", "not"):
+        ent.append(E(m, "r,r", [U(_IALU)], 0.25, 1,
+                     "Table IV incl/addq/cmpl: 0.25 on P4-7"))
+        ent.append(E(m, "r,imm", [U(_IALU)], 0.25, 1))
+        ent.append(E(m, "r", [U(_IALU)], 0.25, 1))  # inc/dec/neg/not
+        ent.append(E(m, "r,mem", [U(_IALU),
+                                  U(_AGU, hideable_load=True, kind="load")],
+                     0.5, 5))
+    ent.append(E("mov", "r,r", [U(_IALU)], 0.25, 0))
+    ent.append(E("mov", "r,imm", [U(_IALU)], 0.25, 1))
+    ent.append(E("mov", "r,mem", [U(_AGU, hideable_load=True, kind="load")],
+                 0.5, 4))
+    ent.append(E("mov", "mem,r", [U("8", kind="store-agu"),
+                                  U("9", kind="store-agu")], 1, 4))
+    ent.append(E("movz", "*", [U(_IALU)], 0.25, 1))
+    ent.append(E("movs", "*", [U(_IALU)], 0.25, 1))
+    ent.append(E("lea", "r,mem", [U(_IALU)], 0.25, 1))
+    ent.append(E("imul", "r,r", [U("5")], 1, 3))
+    for m in ("shl", "shr", "sar", "sal"):
+        ent.append(E(m, "*", [U(_IALU)], 0.25, 1))
+    ent.append(E("push", "*", [U("8", kind="store-agu"),
+                               U("9", kind="store-agu")], 1, 4))
+    ent.append(E("pop", "*", [U(_AGU, hideable_load=True, kind="load")],
+                 0.5, 4))
+
+    # ---- branches: unported, as in the paper's tables ------------------
+    from ..isa import _BRANCHES
+    for b in _BRANCHES:
+        ent.append(E(b, "*", [], 0.5, 0, "branch: unported in paper model"))
+    ent.append(E("call", "*", [], 1, 0))
+
+    for e in ent:
+        db.add(e)
+    return db
+
+
+# Calibrated so the pi -O1 stack-accumulator chain (SLF + vaddsd lat 3)
+# tracks the measured 11.48 cy/it on Zen (paper Table V).
+STORE_FORWARD_LATENCY = 8.5

@@ -1,0 +1,10 @@
+"""ibench-analogue micro-benchmarking (paper Sec. II).
+
+Latency = dependency chain; throughput = k independent chains; port
+mapping = combined (conflict) benchmarks.  Executed with JAX on the host
+CPU — the *methodology* of the paper, applied to the machine we have.
+"""
+from .ibench import (BenchResult, latency_benchmark, sweep_parallelism,
+                     throughput_benchmark)
+from .conflict import conflict_benchmark
+from .model_builder import build_host_model, infer_port_count

@@ -1,0 +1,63 @@
+"""Port-conflict (combined) benchmarks — paper Sec. II-B.
+
+"By adding another instruction form into the already throughput-bound
+benchmark, either an increase or no change in runtime is expected.  If the
+runtime increased, both instruction forms utilize at least one common port."
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .ibench import _loop_overhead, _timeit
+
+
+@dataclass
+class ConflictResult:
+    name: str
+    base_seconds_per_iter: float
+    combined_seconds_per_iter: float
+
+    @property
+    def slowdown(self) -> float:
+        return self.combined_seconds_per_iter / self.base_seconds_per_iter
+
+    @property
+    def shares_port(self) -> bool:
+        # >15% slowdown => at least one common port (threshold mirrors the
+        # paper's Zen example: +104% for vmulpd, +4% for vaddpd)
+        return self.slowdown > 1.15
+
+
+def conflict_benchmark(base_op: Callable, probe_op: Callable,
+                       shape=(4,), dtype=jnp.float32,
+                       parallelism: int = 8, chain_len: int = 16,
+                       iters: int = 1000,
+                       name: str = "conflict") -> ConflictResult:
+    c = jnp.full(shape, 1.0000001, dtype)
+
+    def runner(include_probe: bool):
+        @jax.jit
+        def run(xs, ys):
+            def body(_, state):
+                xs, ys = state
+                for _ in range(chain_len):
+                    xs = tuple(base_op(x, c) for x in xs)
+                    if include_probe:
+                        ys = tuple(probe_op(y, c) for y in ys)
+                return xs, ys
+            return lax.fori_loop(0, iters, body, (xs, ys))
+        xs0 = tuple(jnp.full(shape, 1.0 + i * 1e-3, dtype)
+                    for i in range(parallelism))
+        ys0 = tuple(jnp.full(shape, 2.0 + i * 1e-3, dtype)
+                    for i in range(parallelism))
+        return _timeit(lambda: run(xs0, ys0))
+
+    overhead = _loop_overhead(shape, dtype, iters)
+    base = max(runner(False) - overhead, 1e-12) / iters
+    combined = max(runner(True) - overhead, 1e-12) / iters
+    return ConflictResult(name, base, combined)

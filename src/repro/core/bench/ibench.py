@@ -1,0 +1,113 @@
+"""Latency / throughput chains for JAX ops (paper Sec. II-A).
+
+The paper benchmarks x86 instruction forms with ibench: a dependency chain
+measures latency; >=10 independent chains measure reciprocal throughput.
+We reproduce the harness for JAX ops: the "instruction form" is a callable
+``op(x, y)`` plus operand shape/dtype.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass
+class BenchResult:
+    name: str
+    parallelism: int
+    seconds_per_op: float
+    ops_per_second: float
+
+    def cycles(self, frequency_hz: float) -> float:
+        return self.seconds_per_op * frequency_hz
+
+    def ibench_line(self, frequency_hz: float, tag: str = "") -> str:
+        """Render like the paper's Sec. II-C ibench output."""
+        label = f"{self.name}-{tag or self.parallelism}"
+        return f"{label}: {self.cycles(frequency_hz):7.3f} (clk cy)"
+
+
+def _timeit(fn: Callable[[], object], repeats: int = 5) -> float:
+    fn()  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    # paper Sec. I-C: "we report the best value (highest performance)"
+    return best
+
+
+def latency_benchmark(op: Callable, shape=(4,), dtype=jnp.float32,
+                      chain_len: int = 64, iters: int = 2000,
+                      name: str = "op") -> BenchResult:
+    """Serial dependency chain: x <- op(x, c), paper's latency benchmark."""
+    c = jnp.full(shape, 1.0000001, dtype)
+
+    @jax.jit
+    def run(x0):
+        def body(_, x):
+            for _ in range(chain_len):
+                x = op(x, c)
+            return x
+        return lax.fori_loop(0, iters, body, x0)
+
+    x0 = jnp.ones(shape, dtype)
+    total = _timeit(lambda: run(x0))
+    overhead = _loop_overhead(shape, dtype, iters)
+    per_op = max(total - overhead, 1e-12) / (chain_len * iters)
+    return BenchResult(name, 1, per_op, 1.0 / per_op)
+
+
+def throughput_benchmark(op: Callable, shape=(4,), dtype=jnp.float32,
+                         parallelism: int = 10, chain_len: int = 16,
+                         iters: int = 2000, name: str = "op") -> BenchResult:
+    """`parallelism` independent chains (paper: 'multiple independent
+    dependency chains ... to utilize all functional units')."""
+    c = jnp.full(shape, 1.0000001, dtype)
+
+    @jax.jit
+    def run(xs):
+        def body(_, xs):
+            for _ in range(chain_len):
+                xs = tuple(op(x, c) for x in xs)
+            return xs
+        return lax.fori_loop(0, iters, body, xs)
+
+    xs0 = tuple(jnp.full(shape, 1.0 + i * 1e-3, dtype)
+                for i in range(parallelism))
+    total = _timeit(lambda: run(xs0))
+    overhead = _loop_overhead(shape, dtype, iters)
+    per_op = max(total - overhead, 1e-12) / (chain_len * iters * parallelism)
+    return BenchResult(name, parallelism, per_op, 1.0 / per_op)
+
+
+def sweep_parallelism(op: Callable, shape=(4,), dtype=jnp.float32,
+                      levels=(1, 2, 4, 5, 8, 10, 12),
+                      name: str = "op") -> list[BenchResult]:
+    """Paper Sec. II-C: run the form at increasing parallelism; the level
+    where per-op time saturates reveals the number of ports."""
+    out = [latency_benchmark(op, shape, dtype, name=name)]
+    for p in levels[1:]:
+        out.append(throughput_benchmark(op, shape, dtype, parallelism=p,
+                                        name=name))
+    return out
+
+
+def _loop_overhead(shape, dtype, iters: int) -> float:
+    key = (tuple(shape), jnp.dtype(dtype).name, iters)
+    if key not in _OVERHEAD_CACHE:
+        @jax.jit
+        def run(x0):
+            return lax.fori_loop(0, iters, lambda _, x: x, x0)
+        x0 = jnp.ones(shape, dtype)
+        _OVERHEAD_CACHE[key] = _timeit(lambda: run(x0))
+    return _OVERHEAD_CACHE[key]
+
+
+_OVERHEAD_CACHE: dict = {}

@@ -1,0 +1,76 @@
+"""Semi-automatic machine-model construction (paper Sec. II-C).
+
+From parallelism sweeps, infer the number of independent ports an
+instruction form can use (reciprocal TP = 1/ports at saturation), then
+assemble a :class:`PortModel` + :class:`InstructionDB` for the host — the
+same workflow the paper walks through for vfmadd132pd on Zen/Skylake.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from ..database import E, InstructionDB
+from ..ports import PortModel, U
+from .ibench import BenchResult, sweep_parallelism
+
+
+def infer_port_count(results: list[BenchResult],
+                     saturation_tol: float = 0.15) -> int:
+    """Latency / saturated-throughput ratio, rounded (paper: 'the
+    instruction form can be spread among two separate ports, because its
+    throughput is one half')."""
+    latency = results[0].seconds_per_op
+    saturated = min(r.seconds_per_op for r in results)
+    ports = max(1, round(latency / max(saturated, 1e-15)))
+    return ports
+
+
+@dataclass
+class MeasuredForm:
+    name: str
+    op: Callable
+    latency_s: float
+    throughput_s: float
+    ports: int
+
+
+def build_host_model(ops: dict[str, Callable] | None = None,
+                     shape=(4,), dtype=jnp.float32,
+                     frequency_hz: float = 2.0e9
+                     ) -> tuple[PortModel, InstructionDB,
+                                list[MeasuredForm]]:
+    """Benchmark each op, infer port counts, emit a synthetic port model
+    ("h0", "h1", ...) sized to the widest form, and a database whose
+    occupations reproduce the measured reciprocal throughputs."""
+    if ops is None:
+        ops = {
+            "add": lambda x, c: x + c,
+            "mul": lambda x, c: x * c,
+            "fma": lambda x, c: x * c + c,
+            "div": lambda x, c: x / c,
+        }
+    measured: list[MeasuredForm] = []
+    for name, op in ops.items():
+        sweep = sweep_parallelism(op, shape, dtype, name=name)
+        ports = infer_port_count(sweep)
+        measured.append(MeasuredForm(
+            name=name, op=op,
+            latency_s=sweep[0].seconds_per_op,
+            throughput_s=min(r.seconds_per_op for r in sweep),
+            ports=ports))
+    width = max(m.ports for m in measured)
+    port_names = tuple(f"h{i}" for i in range(width))
+    model = PortModel(name="host-cpu (measured)", ports=port_names,
+                      unit="s", frequency_hz=frequency_hz)
+    db = InstructionDB("host", model)
+    for m in measured:
+        eligible = "|".join(port_names[:m.ports])
+        # occupation in seconds: saturated per-op time * ports
+        cycles = m.throughput_s * m.ports
+        db.add(E(m.name, "v,v,v", [U(eligible, cycles)],
+                 tp=m.throughput_s, lat=m.latency_s,
+                 notes=f"measured, {m.ports} port(s)"))
+    return model, db, measured

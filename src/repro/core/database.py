@@ -1,0 +1,132 @@
+"""Instruction-form database (paper Sec. II).
+
+Each entry maps an *instruction form* (mnemonic + Intel-order operand-type
+signature) to its micro-op decomposition, reciprocal throughput and latency —
+the same triple OSACA stores as e.g.::
+
+    vfmadd132pd-xmm_xmm_mem, 0.5, 4.0, "(0.5,0,0.5,0.5,0.5,0,0,0,0)"
+
+We keep the eligible-port *sets* rather than the averaged occupation vector,
+because the averaged vector is derivable (uniform scheduler) while the sets
+additionally enable the min-max balanced scheduler (beyond-paper, IACA-like).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Callable, Iterable
+
+from .isa import Instruction
+from .ports import PortModel, Uop
+
+
+@dataclass(frozen=True)
+class InstrForm:
+    mnemonic: str
+    signature: tuple[str, ...]     # Intel order; "r" matches any gpr width
+    uops: tuple[Uop, ...]
+    throughput: float              # reciprocal throughput [cy/instr]
+    latency: float
+    notes: str = ""
+
+    @property
+    def key(self) -> tuple[str, tuple[str, ...]]:
+        return (self.mnemonic, self.signature)
+
+    def occupation_uniform(self, model: PortModel) -> dict[str, float]:
+        occ = model.zero_occupation()
+        for uop in self.uops:
+            share = uop.cycles / len(uop.ports)
+            for p in uop.ports:
+                occ[p] += share
+        return occ
+
+
+def _collapse_gpr(token: str) -> str:
+    return "r" if token in ("r8", "r16", "r32", "r64", "reg") else token
+
+
+@dataclass
+class MissingForm:
+    instruction: Instruction
+
+    def benchmark_spec(self) -> str:
+        """ibench-style benchmark stub for an unknown form (paper Fig. 4:
+        'if no match was found, corresponding benchmark files are generated
+        automatically')."""
+        sig = "_".join(self.instruction.signature) or "none"
+        return (f"# auto-generated ibench benchmark for "
+                f"{self.instruction.mnemonic}-{sig}\n"
+                f"# latency: dependency chain; throughput: >=10 parallel "
+                f"chains (paper Sec. II-A)\n"
+                f"{self.instruction.text}\n")
+
+
+class InstructionDB:
+    """Lookup with progressive generalisation:
+
+    1. exact (mnemonic, signature)
+    2. gpr widths collapsed to "r"
+    3. per-mnemonic default entry (signature ("*",))
+    """
+
+    def __init__(self, name: str, model: PortModel,
+                 entries: Iterable[InstrForm] = ()):
+        self.name = name
+        self.model = model
+        self._exact: dict[tuple[str, tuple[str, ...]], InstrForm] = {}
+        self._default: dict[str, InstrForm] = {}
+        for e in entries:
+            self.add(e)
+
+    def add(self, entry: InstrForm) -> None:
+        self.model.validate_uops(entry.uops)
+        if entry.signature == ("*",):
+            self._default[entry.mnemonic] = entry
+        else:
+            self._exact[entry.key] = entry
+
+    def __len__(self) -> int:
+        return len(self._exact) + len(self._default)
+
+    def lookup(self, instr: Instruction) -> InstrForm | None:
+        sig = instr.signature
+        hit = self._exact.get((instr.mnemonic, sig))
+        if hit is not None:
+            return hit
+        collapsed = tuple(_collapse_gpr(t) for t in sig)
+        hit = self._exact.get((instr.mnemonic, collapsed))
+        if hit is not None:
+            return hit
+        # imm/reg interchangeable for most integer ALU forms
+        relaxed = tuple("r" if t == "imm" else t for t in collapsed)
+        hit = self._exact.get((instr.mnemonic, relaxed))
+        if hit is not None:
+            return hit
+        return self._default.get(instr.mnemonic)
+
+    def entries(self) -> list[InstrForm]:
+        return list(self._exact.values()) + list(self._default.values())
+
+
+# --------------------------------------------------------------------------
+# Entry-construction DSL used by the per-architecture modules
+# --------------------------------------------------------------------------
+
+def E(mnemonic: str, signature: str, uops: Iterable[Uop],
+      tp: float, lat: float, notes: str = "") -> InstrForm:
+    sig = tuple(s for s in signature.split(",") if s) if signature else ()
+    return InstrForm(mnemonic, sig, tuple(uops), tp, lat, notes)
+
+
+def widen_double_pumped(entry: InstrForm, xmm_token: str = "xmm",
+                        ymm_token: str = "ymm") -> InstrForm:
+    """Derive the 256-bit form of a 128-bit entry on a double-pumped
+    architecture (AMD Zen executes AVX as two 128-bit halves — paper
+    Sec. III-A): every uop's occupation doubles, throughput doubles."""
+    sig = tuple(ymm_token if t == xmm_token else t for t in entry.signature)
+    return InstrForm(
+        mnemonic=entry.mnemonic, signature=sig,
+        uops=tuple(u.scaled(2.0) for u in entry.uops),
+        throughput=entry.throughput * 2.0,
+        latency=entry.latency + 1.0,
+        notes=(entry.notes + " double-pumped 2x128b").strip())

@@ -1,0 +1,2 @@
+from .parser import HloOp, parse_hlo_module, collective_ops
+from .analyzer import analyze_hlo, RooflineTerms, HloAnalysis

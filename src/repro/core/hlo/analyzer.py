@@ -1,0 +1,408 @@
+"""OSACA-on-HLO: throughput analysis of a compiled JAX step.
+
+The paper predicts loop throughput as max-over-ports of summed occupation;
+under assumption (A3)/"perfect overlap" the same bound for a TPU step is
+
+    T_pred = max(MXU+VPU, HBM, ICI)   [seconds]
+
+with per-op occupations accumulated exactly like the x86 tables.  We also
+report the no-overlap sum as an upper bound; the pair brackets reality.
+
+Key extension over ``compiled.cost_analysis()``: while-loop (lax.scan)
+bodies are multiplied by their trip count, recovered from the loop-
+condition computation's comparison constant.  Layer stacks, attention
+chunk scans and MoE dispatch all live inside scans here, so without trip
+counts the roofline would undercount by orders of magnitude.
+
+Input is the SPMD-partitioned module text (per-device shapes), so port
+totals are per-chip values.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from ..arch.tpu_v5e import (HBM_BW, ICI_BW, PEAK_FLOPS, TPU_V5E,
+                            VPU_FLOPS, VPU_OP_WEIGHT)
+from .parser import HloOp, parse_module
+
+# ops that are pure metadata / no data movement of their own
+_SKIP_KINDS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+    "all-gather-done", "all-reduce-done", "collective-permute-done",
+    "async-done", "async-update", "copy-start", "copy-done",
+})
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FUSION_CALL_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+# XLA annotates loop bounds on the while op itself:
+#   backend_config={..."known_trip_count":{"n":"36"}...}
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+
+
+@dataclass
+class Cost:
+    mxu_flops: float = 0.0
+    vpu_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)  # kind -> [count, bytes]
+
+    def add(self, other: "Cost", times: float = 1.0) -> None:
+        self.mxu_flops += other.mxu_flops * times
+        self.vpu_flops += other.vpu_flops * times
+        self.hbm_bytes += other.hbm_bytes * times
+        self.ici_bytes += other.ici_bytes * times
+        for k, (c, b) in other.collectives.items():
+            ent = self.collectives.setdefault(k, [0.0, 0.0])
+            ent[0] += c * times
+            ent[1] += b * times
+
+    def seconds(self, dtype: str = "bf16",
+                ici_links: float = 1.0) -> dict[str, float]:
+        return {
+            "MXU": self.mxu_flops / PEAK_FLOPS[dtype],
+            "VPU": self.vpu_flops / VPU_FLOPS,
+            "HBM": self.hbm_bytes / HBM_BW,
+            "ICI": self.ici_bytes / (ICI_BW * ici_links),
+        }
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    mxu_s: float = 0.0
+    vpu_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_overlap(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bound_serial(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+
+@dataclass
+class HloAnalysis:
+    terms: RooflineTerms
+    flops: float                     # per device (MXU + VPU)
+    mxu_flops: float
+    hbm_bytes: float                 # per device
+    ici_bytes: float                 # per device (link bytes)
+    collective_breakdown: dict       # kind -> (count, bytes)
+    op_rows: list                    # (text, {port: seconds})
+    n_ops: int
+    flop_dtype: str = "bf16"
+
+    def render(self, top: int = 25) -> str:
+        lines = [
+            f"TPU v5e port-model analysis ({self.n_ops} entry ops, "
+            f"dtype={self.flop_dtype})",
+            f"  MXU     {self.terms.mxu_s * 1e3:12.3f} ms   "
+            f"({self.mxu_flops / 1e12:.2f} TFLOP/device)",
+            f"  VPU     {self.terms.vpu_s * 1e3:12.3f} ms",
+            f"  HBM     {self.terms.memory_s * 1e3:12.3f} ms   "
+            f"({self.hbm_bytes / 1e9:.2f} GB/device)",
+            f"  ICI     {self.terms.collective_s * 1e3:12.3f} ms   "
+            f"({self.ici_bytes / 1e9:.2f} GB link/device)",
+            f"  bound   {self.terms.bound_overlap * 1e3:12.3f} ms "
+            f"(perfect overlap) / {self.terms.bound_serial * 1e3:.3f} ms "
+            f"(serial)",
+            f"  bottleneck: {self.terms.dominant}",
+        ]
+        if self.collective_breakdown:
+            lines.append("  collectives:")
+            for k, (c, b) in sorted(self.collective_breakdown.items()):
+                lines.append(f"    {k:24s} x{c:<8.0f} {b / 1e9:10.3f} GB")
+        lines.append("  top ops by port occupation:")
+        lines.append(f"  {'MXU[ms]':>9} {'VPU[ms]':>9} {'HBM[ms]':>9} "
+                     f"{'ICI[ms]':>9}  op")
+        for text, occ in self.op_rows[:top]:
+            lines.append(
+                f"  {occ.get('MXU', 0) * 1e3:9.4f} "
+                f"{occ.get('VPU', 0) * 1e3:9.4f} "
+                f"{occ.get('HBM', 0) * 1e3:9.4f} "
+                f"{occ.get('ICI', 0) * 1e3:9.4f}  {text[:100]}")
+        return "\n".join(lines)
+
+
+def _dot_flops(op: HloOp) -> float:
+    if not op.result_shapes or not op.operand_shapes:
+        return 0.0
+    m = _CONTRACT_RE.search(op.attrs)
+    contract = 1
+    if m and op.operand_shapes:
+        lhs = op.operand_shapes[0]
+        for idx in (int(x) for x in m.group(1).split(",") if x):
+            if idx < len(lhs.dims):
+                contract *= lhs.dims[idx]
+    return 2.0 * op.result_shapes[0].elements * contract
+
+
+def _elementwise_flops(op: HloOp) -> float:
+    w = VPU_OP_WEIGHT.get(op.kind)
+    if w is None:
+        if op.kind in ("reduce", "reduce-window", "scatter", "gather",
+                       "dynamic-update-slice", "dynamic-slice", "pad",
+                       "broadcast", "reshape", "transpose", "copy",
+                       "slice", "concatenate", "reverse", "clamp",
+                       "map", "and", "or", "not", "xor", "abs", "negate",
+                       "floor", "ceil", "sign", "is-finite", "iota",
+                       "reduce-precision", "shift-left",
+                       "shift-right-logical", "shift-right-arithmetic"):
+            w = 1.0
+        elif op.kind == "sort":
+            w = 20.0  # ~log2(n) passes for typical dispatch sorts
+        else:
+            return 0.0
+    n = op.result_shapes[0].elements if op.result_shapes else 0
+    return w * n
+
+
+def _collective_link_bytes(op: HloOp) -> float:
+    """Ring-algorithm link bytes per device."""
+    b = float(op.operand_bytes)
+    g = max(op.group_size, 1)
+    if g <= 1:
+        return 0.0
+    if op.kind.startswith("all-gather"):
+        return b * (g - 1)
+    if op.kind.startswith("all-reduce"):
+        return 2.0 * b * (g - 1) / g
+    if op.kind == "reduce-scatter":
+        return b * (g - 1) / g
+    if "all-to-all" in op.kind:
+        return b * (g - 1) / g
+    return b  # collective-permute
+
+
+class _ModuleCost:
+    def __init__(self, ops: list[HloOp]):
+        self.by_comp: dict[str, list[HloOp]] = {}
+        self.by_name: dict[str, HloOp] = {}
+        for o in ops:
+            self.by_comp.setdefault(o.computation, []).append(o)
+            self.by_name[o.name] = o
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    def _bf16_promoted(self, o: HloOp) -> bool:
+        """XLA's CPU BFloat16Normalization promotes bf16 reducing
+        collectives to f32, wrapping the operand in convert(bf16->f32).
+        On the TPU target these run natively in bf16 — detect the
+        wrapper and account the collective at bf16 width."""
+        if not o.operand_shapes or o.operand_shapes[0].dtype != "f32":
+            return False
+        for nm in o.operand_names:
+            prod = self.by_name.get(nm)
+            if prod is not None and prod.kind == "convert" \
+                    and prod.operand_shapes \
+                    and prod.operand_shapes[0].dtype == "bf16":
+                return True
+        return False
+
+    def while_trips(self, o: HloOp) -> float:
+        """Loop bound: XLA's known_trip_count annotation when present,
+        else the largest constant in the loop-condition computation
+        (pre-optimization modules)."""
+        m = _TRIP_RE.search(o.attrs)
+        if m:
+            return float(m.group(1))
+        cond = _COND_RE.search(o.attrs)
+        if not cond:
+            return 1.0
+        best = 1
+        for co in self.by_comp.get(cond.group(1), ()):
+            if co.kind == "constant":
+                cm = re.match(r"\s*(\d+)\s*$", co.operands_text)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+            cm = _CONST_RE.search(co.attrs)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        return float(best)
+
+    def op_cost(self, o: HloOp, in_fusion: bool) -> Cost:
+        c = Cost()
+        if o.kind in _SKIP_KINDS:
+            return c
+        if o.is_collective:
+            link = _collective_link_bytes(o)
+            if self._bf16_promoted(o):
+                link *= 0.5     # native bf16 on the TPU target
+            c.ici_bytes += link
+            ent = c.collectives.setdefault(o.kind, [0.0, 0.0])
+            ent[0] += 1
+            ent[1] += link
+            return c
+        if o.kind == "dot":
+            c.mxu_flops += _dot_flops(o)
+            if not in_fusion:
+                c.hbm_bytes += o.operand_bytes + o.result_bytes
+            return c
+        if o.kind == "fusion":
+            m = _FUSION_CALL_RE.search(o.attrs)
+            if m:
+                c.add(self.comp_cost(m.group(1), in_fusion=True))
+            if not in_fusion:
+                c.hbm_bytes += self.fusion_io_bytes(
+                    o, m.group(1) if m else None)
+            return c
+        if o.kind in ("dynamic-slice", "dynamic-update-slice") \
+                and not in_fusion:
+            # in-place slice traffic: only the slice moves, not the buffer
+            if o.kind == "dynamic-slice":
+                c.hbm_bytes += 2 * o.result_bytes
+            else:
+                upd = o.operand_shapes[1].bytes \
+                    if len(o.operand_shapes) > 1 else o.result_bytes
+                c.hbm_bytes += 2 * upd
+            c.vpu_flops += _elementwise_flops(o)
+            return c
+        if o.kind == "while":
+            body = _BODY_RE.search(o.attrs)
+            if body:
+                c.add(self.comp_cost(body.group(1), in_fusion=False),
+                      times=self.while_trips(o))
+            return c
+        if o.kind == "conditional":
+            m = _BRANCH_RE.search(o.attrs)
+            if m:
+                branches = [b.strip().strip("%") for b in
+                            m.group(1).split(",") if b.strip()]
+                # account the most expensive branch
+                costs = [self.comp_cost(b, in_fusion=False)
+                         for b in branches]
+                if costs:
+                    c.add(max(costs, key=lambda x: x.mxu_flops
+                              + x.vpu_flops + x.hbm_bytes))
+            return c
+        if o.kind in ("call", "custom-call", "async-start"):
+            m = _FUSION_CALL_RE.search(o.attrs) or \
+                re.search(r"to_apply=%?([\w.\-]+)", o.attrs)
+            if m and m.group(1) in self.by_comp:
+                c.add(self.comp_cost(m.group(1), in_fusion=in_fusion))
+            elif not in_fusion:
+                c.hbm_bytes += o.operand_bytes + o.result_bytes
+            return c
+        # plain op
+        c.vpu_flops += _elementwise_flops(o)
+        if not in_fusion:
+            c.hbm_bytes += o.operand_bytes + o.result_bytes
+        return c
+
+    def fusion_io_bytes(self, o: HloOp, body: str | None) -> float:
+        """HBM traffic of a fusion: parameters consumed only via
+        dynamic-slice count at slice size; a dynamic-update-slice root
+        writes only the update (the target buffer is aliased in place).
+        This matters enormously under lax.scan, where every layer reads
+        its weights by slicing a stacked buffer and stashes residuals by
+        update-slicing — naive operand+result accounting overcounts by
+        the scan length."""
+        if body is None or body not in self.by_comp:
+            return float(o.operand_bytes + o.result_bytes)
+        body_ops = self.by_comp[body]
+        consumers: dict[str, list[HloOp]] = {}
+        for b in body_ops:
+            for nm in b.operand_names:
+                consumers.setdefault(nm, []).append(b)
+        total = 0.0
+        root = None
+        dus_targets: set[str] = set()
+        for b in body_ops:
+            if b.is_root:
+                root = b
+        if root is not None and root.kind == "dynamic-update-slice" \
+                and root.operand_names:
+            dus_targets.add(root.operand_names[0])
+        for b in body_ops:
+            if b.kind != "parameter":
+                continue
+            cons = consumers.get(b.name, [])
+            if b.name in dus_targets and len(cons) == 1:
+                continue  # aliased in-place output buffer: no read
+            if cons and all(x.kind == "dynamic-slice" for x in cons):
+                total += sum(x.result_bytes for x in cons)
+            else:
+                total += b.result_bytes
+        if root is not None and root.kind == "dynamic-update-slice":
+            upd = root.operand_shapes[1].bytes \
+                if len(root.operand_shapes) > 1 else root.result_bytes
+            total += upd
+        else:
+            total += o.result_bytes
+        return total
+
+    def comp_cost(self, name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total  # break cycles
+        for o in self.by_comp.get(name, ()):
+            total.add(self.op_cost(o, in_fusion))
+        return total
+
+
+def analyze_hlo(text: str, *, ici_links: float = 1.0,
+                flop_dtype: str = "bf16") -> HloAnalysis:
+    ops, entry_name = parse_module(text)
+    mc = _ModuleCost(ops)
+
+    if not entry_name or entry_name not in mc.by_comp:
+        # fall back: a computation nothing else calls
+        called: set[str] = set()
+        for o in ops:
+            for rx in (_FUSION_CALL_RE, _COND_RE, _BODY_RE):
+                m = rx.search(o.attrs)
+                if m:
+                    called.add(m.group(1))
+            m = _BRANCH_RE.search(o.attrs)
+            if m:
+                called.update(b.strip().strip("%")
+                              for b in m.group(1).split(","))
+        comp_names = list(mc.by_comp)
+        uncalled = [n for n in comp_names if n not in called]
+        entry_name = uncalled[0] if uncalled else comp_names[0]
+
+    total = mc.comp_cost(entry_name, in_fusion=False)
+    secs = total.seconds(flop_dtype, ici_links)
+
+    # per-op rows for the report (entry level; whiles aggregated)
+    rows = []
+    for o in mc.by_comp.get(entry_name, ()):
+        c = mc.op_cost(o, in_fusion=False)
+        occ = c.seconds(flop_dtype, ici_links)
+        occ = {k: v for k, v in occ.items() if v > 0}
+        if not occ:
+            continue
+        label = o.kind
+        if o.kind == "while":
+            label = f"while x{mc.while_trips(o):.0f}"
+        rows.append((f"{label} {o.name}", occ))
+    rows.sort(key=lambda r: -max(r[1].values()))
+
+    terms = RooflineTerms(
+        compute_s=secs["MXU"] + secs["VPU"], memory_s=secs["HBM"],
+        collective_s=secs["ICI"], mxu_s=secs["MXU"], vpu_s=secs["VPU"])
+    return HloAnalysis(
+        terms=terms, flops=total.mxu_flops + total.vpu_flops,
+        mxu_flops=total.mxu_flops,
+        hbm_bytes=total.hbm_bytes, ici_bytes=total.ici_bytes,
+        collective_breakdown={k: (v[0], v[1])
+                              for k, v in total.collectives.items()},
+        op_rows=rows, n_ops=len(mc.by_comp.get(entry_name, ())),
+        flop_dtype=flop_dtype)

@@ -1,0 +1,165 @@
+"""HLO text parser: turns ``compiled.as_text()`` (or pre-optimization HLO)
+into an *instruction stream* — the TPU analogue of the paper's marked
+assembly kernel.  Each HLO op becomes an instruction form
+(op kind x operand shapes x dtypes), consumed by repro.core.hlo.analyzer
+exactly the way repro.core.analysis consumes x86 forms.
+
+Post-optimization HLO prints operands by name only (no shapes), so parsing
+is two-pass: first collect every instruction's result shape into a symbol
+table, then resolve operand shapes by name.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction: [ROOT] %name = <result-type> opcode(...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^()]*?(?:\([^()]*\))?[^()=]*?\)?)\s*"
+    r"([\w\-]+)\((.*)$")
+# computation header: [ENTRY] %name (args) -> result {      (no " = ")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]?")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = frozenset({
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "ragged-all-to-all",
+})
+
+
+@dataclass
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def elements(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elements * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+@dataclass
+class HloOp:
+    name: str
+    kind: str                      # opcode: dot, fusion, all-gather, ...
+    result_shapes: list[Shape]
+    operand_names: list[str]
+    attrs: str
+    computation: str = "ENTRY"
+    operand_shapes: list[Shape] = field(default_factory=list)
+    group_size: int = 1            # replica-group size for collectives
+    is_root: bool = False
+    operands_text: str = ""        # raw operand text (constants keep
+                                   # their literal value here)
+
+    @property
+    def is_collective(self) -> bool:
+        return self.kind in COLLECTIVES
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(s.bytes for s in self.result_shapes)
+
+    @property
+    def operand_bytes(self) -> int:
+        return sum(s.bytes for s in self.operand_shapes)
+
+
+def _parse_shapes(text: str) -> list[Shape]:
+    return [Shape(m.group(1),
+                  tuple(int(x) for x in m.group(2).split(",") if x))
+            for m in _SHAPE_RE.finditer(text)
+            if m.group(1) in _DTYPE_BYTES]
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_V2_RE.search(attrs)
+    if m:  # replica_groups=[n_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(attrs)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return 1
+
+
+def parse_module(text: str) -> tuple[list[HloOp], str]:
+    """Parse every computation; returns (ops, entry_computation_name)."""
+    ops: list[HloOp] = []
+    symbols: dict[str, list[Shape]] = {}
+    computation = "ENTRY"
+    entry_name = ""
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith(("//", "#")):
+            continue
+        if " = " not in stripped:
+            hm = _HEADER_RE.match(stripped)
+            if hm and stripped.rstrip().endswith("{"):
+                computation = hm.group(2)
+                if hm.group(1):
+                    entry_name = computation
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_text, kind, rest = m.groups()
+        depth, idx = 1, 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands_text = rest[:idx]
+        attrs = rest[idx + 1:]
+        shapes = _parse_shapes(result_text)
+        op = HloOp(
+            name=name, kind=kind, result_shapes=shapes,
+            operand_names=_OPERAND_NAME_RE.findall(operands_text),
+            attrs=attrs, computation=computation,
+            group_size=_group_size(attrs) if kind in COLLECTIVES else 1,
+            is_root=stripped.startswith("ROOT"),
+            operands_text=operands_text)
+        # operands may be printed inline with shapes (pre-optimization)
+        inline = _parse_shapes(operands_text)
+        if inline:
+            op.operand_shapes = inline
+        ops.append(op)
+        symbols[name] = shapes
+    # second pass: resolve operand shapes by name
+    for op in ops:
+        if not op.operand_shapes and op.operand_names:
+            resolved: list[Shape] = []
+            for n in op.operand_names:
+                resolved.extend(symbols.get(n, ()))
+            op.operand_shapes = resolved
+    return ops, entry_name
+
+
+def parse_hlo_module(text: str) -> list[HloOp]:
+    return parse_module(text)[0]
+
+
+def collective_ops(ops: list[HloOp]) -> list[HloOp]:
+    return [o for o in ops if o.is_collective]

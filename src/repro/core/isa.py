@@ -1,0 +1,277 @@
+"""x86 assembly parsing (AT&T and Intel syntax) into instruction forms.
+
+The *instruction form* (paper Sec. II) is a mnemonic together with its
+operand-type signature, e.g. ``vfmadd132pd (%rax),%xmm0,%xmm0`` (AT&T)
+==> form ``vfmadd132pd xmm_xmm_mem`` in Intel (destination-first) order,
+which is the order used by the OSACA database and by ibench.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+# --------------------------------------------------------------------------
+# Registers
+# --------------------------------------------------------------------------
+
+_GPR64 = {"rax", "rbx", "rcx", "rdx", "rsi", "rdi", "rbp", "rsp",
+          *(f"r{i}" for i in range(8, 16))}
+_GPR32 = {"eax", "ebx", "ecx", "edx", "esi", "edi", "ebp", "esp",
+          *(f"r{i}d" for i in range(8, 16))}
+_GPR16 = {"ax", "bx", "cx", "dx", "si", "di", "bp", "sp",
+          *(f"r{i}w" for i in range(8, 16))}
+_GPR8 = {"al", "bl", "cl", "dl", "ah", "bh", "ch", "dh", "sil", "dil",
+         "bpl", "spl", *(f"r{i}b" for i in range(8, 16))}
+
+
+def register_class(name: str) -> str:
+    """Map a register name (no ``%``) to its operand-type token."""
+    n = name.lower()
+    if n.startswith("zmm"):
+        return "zmm"
+    if n.startswith("ymm"):
+        return "ymm"
+    if n.startswith("xmm"):
+        return "xmm"
+    if n.startswith("k") and n[1:].isdigit():
+        return "k"
+    if n in _GPR64:
+        return "r64"
+    if n in _GPR32:
+        return "r32"
+    if n in _GPR16:
+        return "r16"
+    if n in _GPR8:
+        return "r8"
+    if n in ("rip", "eip"):
+        return "rip"
+    if n.startswith("st"):
+        return "st"
+    return "reg"
+
+
+@dataclass(frozen=True)
+class Operand:
+    kind: str                 # "reg" | "mem" | "imm" | "label"
+    text: str                 # original text
+    reg: str | None = None    # register name for kind == "reg"
+    # memory decomposition (paper: base/offset/index/scale detection)
+    base: str | None = None
+    index: str | None = None
+    scale: int = 1
+    displacement: int = 0
+
+    @property
+    def type_token(self) -> str:
+        if self.kind == "reg":
+            return register_class(self.reg or "")
+        if self.kind == "mem":
+            return "mem"
+        if self.kind == "imm":
+            return "imm"
+        return "label"
+
+    @property
+    def is_simple_address(self) -> bool:
+        """Base-plus-displacement only (relevant for SKL port-7 AGU)."""
+        return self.kind == "mem" and self.index is None
+
+
+@dataclass(frozen=True)
+class Instruction:
+    mnemonic: str                     # normalised (AT&T size suffix stripped)
+    raw_mnemonic: str
+    operands: tuple[Operand, ...]     # in *Intel* order (destination first)
+    text: str                         # original source line
+    line: int = 0
+    label: str | None = None          # label immediately preceding
+
+    @property
+    def signature(self) -> tuple[str, ...]:
+        return tuple(op.type_token for op in self.operands)
+
+    @property
+    def form(self) -> str:
+        sig = "_".join(self.signature)
+        return f"{self.mnemonic}-{sig}" if sig else self.mnemonic
+
+    def reads_memory(self) -> bool:
+        # Intel order: destination first; mem source = mem in non-dest slot,
+        # or a dest mem for RMW instructions (handled by the DB entry).
+        return any(op.kind == "mem" for op in self.operands[1:])
+
+    def writes_memory(self) -> bool:
+        return bool(self.operands) and self.operands[0].kind == "mem"
+
+
+# --------------------------------------------------------------------------
+# Mnemonic normalisation
+# --------------------------------------------------------------------------
+
+# AT&T size-suffixed integer mnemonics: addl/addq/cmpl/... -> add/cmp/...
+_SUFFIXABLE = {
+    "add", "sub", "cmp", "test", "mov", "inc", "dec", "and", "or", "xor",
+    "neg", "not", "shl", "shr", "sar", "sal", "lea", "imul", "mul", "push",
+    "pop", "adc", "sbb", "bt", "movz", "movs",
+}
+
+_BRANCHES = {
+    "jmp", "ja", "jae", "jb", "jbe", "jc", "je", "jg", "jge", "jl", "jle",
+    "jna", "jnae", "jnb", "jnbe", "jnc", "jne", "jng", "jnge", "jnl",
+    "jnle", "jno", "jnp", "jns", "jnz", "jo", "jp", "js", "jz", "loop",
+}
+
+
+def is_branch(mnemonic: str) -> bool:
+    return mnemonic in _BRANCHES
+
+
+def normalise_mnemonic(raw: str) -> str:
+    m = raw.lower()
+    if m in _BRANCHES:
+        return m
+    # movzbl / movswq etc.
+    if m.startswith(("movz", "movs")) and len(m) <= 6 and not m.startswith(
+            ("movss", "movsd", "movsh")):
+        return m[:4]
+    if m and m[-1] in "bwlq":
+        base = m[:-1]
+        if base in _SUFFIXABLE:
+            return base
+    return m
+
+
+# --------------------------------------------------------------------------
+# Line parsing
+# --------------------------------------------------------------------------
+
+_LABEL_RE = re.compile(r"^\s*([.\w$@]+):")
+_MEM_ATT_RE = re.compile(
+    r"^\s*(?P<disp>[-+]?(?:0x[0-9a-fA-F]+|\d+))?\s*"
+    r"\(\s*(?:%(?P<base>\w+))?\s*(?:,\s*%(?P<index>\w+)\s*(?:,\s*(?P<scale>[1248]))?)?\s*\)\s*$")
+_MEM_INTEL_RE = re.compile(
+    r"^\s*(?:[a-z]+\s+ptr\s+)?\[(?P<body>[^\]]+)\]\s*$", re.I)
+
+
+def _parse_int(s: str) -> int:
+    s = s.strip()
+    neg = s.startswith("-")
+    s = s.lstrip("+-")
+    val = int(s, 16) if s.lower().startswith("0x") else int(s)
+    return -val if neg else val
+
+
+def _split_operands(text: str) -> list[str]:
+    """Split on commas not inside parens/brackets."""
+    out, depth, cur = [], 0, []
+    for ch in text:
+        if ch in "([":
+            depth += 1
+        elif ch in ")]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def parse_operand_att(text: str) -> Operand:
+    t = text.strip()
+    if t.startswith("$"):
+        return Operand("imm", t)
+    if t.startswith("%"):
+        return Operand("reg", t, reg=t[1:].rstrip(")"))
+    if t.startswith("*"):  # indirect branch target
+        return Operand("mem", t)
+    m = _MEM_ATT_RE.match(t)
+    if m:
+        return Operand(
+            "mem", t,
+            base=m.group("base"), index=m.group("index"),
+            scale=int(m.group("scale") or 1),
+            displacement=_parse_int(m.group("disp")) if m.group("disp") else 0)
+    if re.match(r"^[-+]?(0x[0-9a-fA-F]+|\d+)$", t):
+        # bare displacement (absolute address)
+        return Operand("mem", t, displacement=_parse_int(t))
+    return Operand("label", t)
+
+
+def parse_operand_intel(text: str) -> Operand:
+    t = text.strip()
+    m = _MEM_INTEL_RE.match(t)
+    if m:
+        body = m.group("body").replace(" ", "")
+        base = index = None
+        scale, disp = 1, 0
+        for part in re.split(r"(?=[+-])", body):
+            if not part:
+                continue
+            sign = -1 if part.startswith("-") else 1
+            p = part.lstrip("+-")
+            if "*" in p:
+                r, s = p.split("*")
+                index, scale = r, int(s)
+            elif re.match(r"^(0x[0-9a-fA-F]+|\d+)$", p):
+                disp += sign * _parse_int(p)
+            elif base is None:
+                base = p
+            else:
+                index = p
+        return Operand("mem", t, base=base, index=index, scale=scale,
+                       displacement=disp)
+    if re.match(r"^[-+]?(0x[0-9a-fA-F]+|\d+)$", t):
+        return Operand("imm", t)
+    cls = register_class(t)
+    if cls != "reg" or t.lower() in _GPR64 | _GPR32 | _GPR16 | _GPR8:
+        return Operand("reg", t, reg=t)
+    return Operand("label", t)
+
+
+_DIRECTIVE_PREFIXES = (".", "#")
+
+
+def parse_assembly(source: str, syntax: str = "att") -> list[Instruction]:
+    """Parse an assembly listing into :class:`Instruction` objects.
+
+    Labels and directives are retained as context; comments stripped.
+    Operand order is canonicalised to Intel (destination-first) order.
+    """
+    instructions: list[Instruction] = []
+    pending_label: str | None = None
+    for lineno, raw in enumerate(source.splitlines(), start=1):
+        line = raw.split("#")[0].split(";")[0].strip()
+        if not line:
+            continue
+        lm = _LABEL_RE.match(line)
+        if lm:
+            pending_label = lm.group(1)
+            line = line[lm.end():].strip()
+            if not line:
+                continue
+        if line.startswith(_DIRECTIVE_PREFIXES):
+            continue
+        parts = line.split(None, 1)
+        raw_mnemonic = parts[0].lower()
+        if raw_mnemonic in ("lock", "rep", "repz", "repnz", "data16"):
+            parts = parts[1].split(None, 1)
+            raw_mnemonic = parts[0].lower()
+        operand_text = parts[1] if len(parts) > 1 else ""
+        tokens = _split_operands(operand_text) if operand_text else []
+        if syntax == "att":
+            ops = [parse_operand_att(t) for t in tokens]
+            ops.reverse()  # AT&T source...dest -> Intel dest...source
+        else:
+            ops = [parse_operand_intel(t) for t in tokens]
+        mnemonic = normalise_mnemonic(raw_mnemonic)
+        instructions.append(Instruction(
+            mnemonic=mnemonic, raw_mnemonic=raw_mnemonic,
+            operands=tuple(ops), text=line, line=lineno,
+            label=pending_label))
+        pending_label = None
+    return instructions

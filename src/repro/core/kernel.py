@@ -1,0 +1,82 @@
+"""Kernel extraction from assembly (paper Sec. III).
+
+Supports the IACA byte markers::
+
+    movl $111, %ebx        movl $222, %ebx
+    .byte 100,103,144      .byte 100,103,144
+
+and, when no markers are present, innermost-loop detection: the body between
+a label and the last backward conditional jump to it.
+"""
+from __future__ import annotations
+
+import re
+
+from .isa import Instruction, is_branch, parse_assembly
+
+_MARKER_BYTES_RE = re.compile(r"^\s*\.byte\s+100\s*,\s*103\s*,\s*144\s*$")
+_MARKER_MOV_RE = re.compile(
+    r"^\s*mov[lq]?\s+\$(111|222)\s*,\s*%[er]bx\s*$")
+
+
+def find_marked_region(source: str) -> tuple[int, int] | None:
+    """Return (start_line, end_line) (exclusive) of the IACA-marked region."""
+    start = end = None
+    pending: str | None = None
+    for lineno, raw in enumerate(source.splitlines(), start=1):
+        line = raw.split("#")[0].strip()
+        mm = _MARKER_MOV_RE.match(line)
+        if mm:
+            pending = mm.group(1)
+            continue
+        if _MARKER_BYTES_RE.match(line) and pending:
+            if pending == "111":
+                start = lineno
+            elif pending == "222":
+                end = lineno - 1  # exclude the marker's own mov line
+            pending = None
+            continue
+        pending = None
+    if start is not None and end is not None and end >= start:
+        return start, end
+    return None
+
+
+def _marked_lines(source: str) -> str | None:
+    region = find_marked_region(source)
+    if region is None:
+        return None
+    start, end = region
+    lines = source.splitlines()
+    body = lines[start:end - 1]  # drop the 'movl $222' line preceding end
+    return "\n".join(body)
+
+
+def detect_innermost_loop(instrs: list[Instruction]) -> list[Instruction]:
+    """Innermost loop = shortest (label ... backward-jump-to-label) span."""
+    label_pos: dict[str, int] = {}
+    for idx, ins in enumerate(instrs):
+        if ins.label:
+            label_pos.setdefault(ins.label, idx)
+    best: tuple[int, int] | None = None
+    for idx, ins in enumerate(instrs):
+        if not is_branch(ins.mnemonic) or not ins.operands:
+            continue
+        target = ins.operands[0].text.strip()
+        tpos = label_pos.get(target)
+        if tpos is None or tpos > idx:
+            continue  # forward jump / unknown target
+        span = (tpos, idx)
+        if best is None or (span[1] - span[0]) < (best[1] - best[0]):
+            best = span
+    if best is None:
+        return instrs
+    return instrs[best[0]:best[1] + 1]
+
+
+def extract_kernel(source: str, syntax: str = "att") -> list[Instruction]:
+    """Marked region if present, else innermost detected loop."""
+    marked = _marked_lines(source)
+    if marked is not None:
+        return parse_assembly(marked, syntax=syntax)
+    return detect_innermost_loop(parse_assembly(source, syntax=syntax))

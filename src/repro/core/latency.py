@@ -1,0 +1,197 @@
+"""Critical-path / loop-carried-dependency analysis (beyond-paper).
+
+The paper lists latency modeling as future work (Sec. IV-B) and shows why it
+matters: the pi benchmark at -O1 keeps the accumulator on the stack, and the
+store->load forwarded read-modify-write chain makes measurement ~2x the
+port-bound prediction (paper Sec. III-B, Table V).  We implement it:
+
+* dependency graph over architectural registers and memory locations
+  (stack slots identified by their canonical operand text),
+* intra-iteration edges weighted with producer latency,
+* wrap (loop-carried) edges for values produced in iteration i and consumed
+  in iteration i+1,
+* LCD = the heaviest dependency cycle through one wrap edge; the runtime
+  prediction is then max(throughput_bound, LCD).
+
+Store->load forwarding latency is an architecture constant calibrated like
+any other DB number (paper Sec. II methodology).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .database import InstructionDB
+from .isa import Instruction, Operand
+
+# mnemonics whose first (Intel-order) operand is read AND written
+_RMW = {"add", "sub", "inc", "dec", "and", "or", "xor", "neg", "not",
+        "shl", "shr", "sar", "adc", "sbb", "imul"}
+
+# dependency-breaking zeroing idioms (paper Sec. I-B: "move elimination and
+# zeroing idioms ... circumvent false data dependencies")
+_ZERO_IDIOMS = {"xor", "vxorpd", "vxorps", "vpxor", "pxor", "xorps",
+                "xorpd", "sub"}
+
+
+def _is_zero_idiom(ins: Instruction) -> bool:
+    if ins.mnemonic not in _ZERO_IDIOMS:
+        return False
+    regs = [op.reg for op in ins.operands if op.kind == "reg"]
+    return len(regs) == len(ins.operands) and len(set(regs)) == 1
+
+
+def _mem_key(op: Operand) -> str:
+    return f"mem:{op.base}+{op.index}*{op.scale}+{op.displacement}"
+
+
+def _reads_writes(ins: Instruction) -> tuple[list[str], list[str]]:
+    """Return (reads, writes) as dependence keys, Intel operand order."""
+    reads: list[str] = []
+    writes: list[str] = []
+    ops = ins.operands
+    if not ops:
+        return reads, writes
+    if _is_zero_idiom(ins):
+        # writes the destination with a constant; reads nothing
+        return reads, [f"reg:{_canon_reg(ops[0].reg or '')}"]
+
+    def key(op: Operand) -> str | None:
+        if op.kind == "reg":
+            return f"reg:{_canon_reg(op.reg or '')}"
+        if op.kind == "mem":
+            return _mem_key(op)
+        return None
+
+    # destination
+    dst = ops[0]
+    dk = key(dst)
+    if dk is not None:
+        writes.append(dk)
+        # x86 VEX 2-source ops overwrite dst; legacy/int RMW also read it.
+        if ins.mnemonic in _RMW or (dst.kind == "mem"):
+            if dst.kind == "mem":
+                pass  # stores don't read the slot
+            else:
+                reads.append(dk)
+    # memory address registers are reads
+    for op in ops:
+        if op.kind == "mem":
+            for r in (op.base, op.index):
+                if r:
+                    reads.append(f"reg:{_canon_reg(r)}")
+    # sources
+    for op in ops[1:]:
+        k = key(op)
+        if k is not None:
+            reads.append(k)
+    # cmp/test write nothing (flags ignored at this granularity)
+    if ins.mnemonic in ("cmp", "test"):
+        writes.clear()
+        k0 = key(ops[0])
+        if k0:
+            reads.append(k0)
+    return reads, writes
+
+
+_ALIAS_64 = {"eax": "rax", "ebx": "rbx", "ecx": "rcx", "edx": "rdx",
+             "esi": "rsi", "edi": "rdi", "ebp": "rbp", "esp": "rsp"}
+
+
+def _canon_reg(name: str) -> str:
+    n = name.lower()
+    if n in _ALIAS_64:
+        return _ALIAS_64[n]
+    if n.endswith("d") and n[:-1].startswith("r") and n[1:-1].isdigit():
+        return n[:-1]
+    return n
+
+
+@dataclass
+class LatencyResult:
+    loop_carried_cycles: float
+    chain: list[Instruction]          # instructions on the critical cycle
+    per_edge: list[tuple[int, int, float]]
+
+    def render(self) -> str:
+        lines = [f"Loop-carried dependency: "
+                 f"{self.loop_carried_cycles:.2f} cy/iteration"]
+        for ins in self.chain:
+            lines.append(f"  | {ins.text}")
+        return "\n".join(lines)
+
+
+def analyze_latency(kernel: list[Instruction], db: InstructionDB,
+                    store_forward_latency: float = 0.0) -> LatencyResult:
+    n = len(kernel)
+    lat: list[float] = []
+    rw: list[tuple[list[str], list[str]]] = []
+    store_like: list[bool] = []
+    for ins in kernel:
+        entry = db.lookup(ins)
+        lat.append(entry.latency if entry is not None else 1.0)
+        rw.append(_reads_writes(ins))
+        store_like.append(ins.writes_memory())
+
+    # last writer per key, scanning two unrolled iterations; edges crossing
+    # the boundary are wrap edges.
+    edges: list[tuple[int, int, float, bool]] = []  # (src, dst, w, wrap)
+    writer: dict[str, tuple[int, int]] = {}  # key -> (iteration, index)
+    for it in range(2):
+        for i in range(n):
+            reads, writes = rw[i]
+            for k in reads:
+                w = writer.get(k)
+                if w is None:
+                    continue
+                wit, widx = w
+                weight = lat[widx]
+                if k.startswith("mem:") and store_like[widx]:
+                    weight = store_forward_latency or lat[widx]
+                if wit == it:
+                    if widx < i:
+                        edges.append((widx, i, weight, False))
+                else:
+                    edges.append((widx, i, weight, True))
+            for k in writes:
+                writer[k] = (it, i)
+
+    # LCD: for each wrap edge (u -> v), heaviest intra-iteration DAG path
+    # v ->* u, plus the wrap weight, plus lat consumed at u? (edge weights
+    # already carry producer latency).
+    intra = [[] for _ in range(n)]
+    for u, v, w, wrap in edges:
+        if not wrap and u < v:
+            intra[u].append((v, w))
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def longest_to(target: int, node: int) -> float:
+        if node == target:
+            return 0.0
+        best = float("-inf")
+        for v, w in intra[node]:
+            if v <= target:
+                sub = longest_to(target, v)
+                if sub > float("-inf"):
+                    best = max(best, w + sub)
+        return best
+
+    best_cycle = 0.0
+    best_pair: tuple[int, int, float] | None = None
+    for u, v, w, wrap in edges:
+        if not wrap:
+            continue
+        path = longest_to(u, v) if v <= u else float("-inf")
+        if v == u:
+            path = 0.0
+        if path > float("-inf") and w + path > best_cycle:
+            best_cycle = w + path
+            best_pair = (u, v, w)
+
+    chain: list[Instruction] = []
+    if best_pair is not None:
+        u, v, _ = best_pair
+        chain = [kernel[i] for i in range(v, u + 1)]
+    return LatencyResult(best_cycle, chain,
+                         [(u, v, w) for u, v, w, _ in edges])

@@ -1,0 +1,209 @@
+"""Assembly kernels and expected numbers from the paper (Tables I-VII).
+
+Kernels printed verbatim in the paper: triad SKL -O3 (Table II), triad Zen
+-O3 (Table IV), pi SKL -O3 (Table VI), pi SKL -O2 (Table VII), pi -O1
+(Sec. III-B text).  The -O1/-O2 triad and the Zen-compiled pi -O3 listings
+are not printed; they are reconstructed from GCC 7.2 codegen shape and
+validated against the paper's *predicted* cycle counts (DESIGN.md Sec. 7).
+
+All kernels are wrapped in IACA byte markers to exercise the extractor.
+"""
+from __future__ import annotations
+
+MARK_START = "movl $111, %ebx\n.byte 100,103,144\n"
+MARK_END = "movl $222, %ebx\n.byte 100,103,144\n"
+
+
+def marked(body: str) -> str:
+    return MARK_START + body.strip("\n") + "\n" + MARK_END
+
+
+# --------------------------------------------------------------------- #
+# Schoenauer triad: a[j] = b[j] + c[j] * d[j]     (paper Sec. III-A)
+# --------------------------------------------------------------------- #
+
+# Table II listing (compiled for Skylake, -O3, AVX, unroll 4)
+TRIAD_SKL_O3 = marked("""
+.L10:
+        vmovapd (%r15,%rax), %ymm0
+        vmovapd (%r12,%rax), %ymm3
+        addl    $1, %ecx
+        vfmadd132pd     0(%r13,%rax), %ymm3, %ymm0
+        vmovapd %ymm0, (%r14,%rax)
+        addq    $32, %rax
+        cmpl    %ecx, %r10d
+        ja      .L10
+""")
+
+# Table IV listing (compiled for Zen, -O3, 128-bit SSE/AVX, unroll 2)
+TRIAD_ZEN_O3 = marked("""
+.L10:
+        vmovaps 0(%r13,%rax), %xmm0
+        vmovaps (%r15,%rax), %xmm3
+        incl    %esi
+        vfmadd132pd     (%r14,%rax), %xmm3, %xmm0
+        vmovaps %xmm0, (%r12,%rax)
+        addq    $16, %rax
+        cmpl    %esi, %ebx
+        ja      .L10
+""")
+
+# Reconstructed scalar triad (-O1/-O2 on both compilers; unroll 1)
+TRIAD_SCALAR = marked("""
+.L3:
+        vmovsd  (%rcx,%rax,8), %xmm0
+        vmulsd  (%rdx,%rax,8), %xmm0, %xmm0
+        vaddsd  (%rsi,%rax,8), %xmm0, %xmm0
+        vmovsd  %xmm0, (%rdi,%rax,8)
+        addq    $1, %rax
+        cmpq    %rbp, %rax
+        jne     .L3
+""")
+
+# --------------------------------------------------------------------- #
+# pi by rectangular integration (paper Sec. III-B)
+# --------------------------------------------------------------------- #
+
+# -O1 listing (printed in Sec. III-B); the sum lives on the stack ->
+# loop-carried store/load chain, port model underestimates (Table V)
+PI_O1 = marked("""
+.L2:
+        vxorpd  %xmm0, %xmm0, %xmm0
+        vcvtsi2sd       %eax, %xmm0, %xmm0
+        vaddsd  %xmm4, %xmm0, %xmm0
+        vmulsd  %xmm3, %xmm0, %xmm0
+        vmulsd  %xmm0, %xmm0, %xmm0
+        vaddsd  %xmm2, %xmm0, %xmm0
+        vdivsd  %xmm0, %xmm1, %xmm0
+        vaddsd  (%rsp), %xmm0, %xmm5
+        vmovsd  %xmm5, (%rsp)
+        addl    $1, %eax
+        cmpl    $1000000000, %eax
+        jne     .L2
+""")
+
+# -O2 listing (Table VII)
+PI_O2 = marked("""
+.L2:
+        vxorpd  %xmm0, %xmm0, %xmm0
+        vcvtsi2sd       %eax, %xmm0, %xmm0
+        addl    $1, %eax
+        vaddsd  %xmm5, %xmm0, %xmm0
+        vmulsd  %xmm3, %xmm0, %xmm0
+        vfmadd132sd     %xmm0, %xmm4, %xmm0
+        vdivsd  %xmm0, %xmm2, %xmm0
+        vaddsd  %xmm0, %xmm1, %xmm1
+        cmpl    $1000000000, %eax
+        jne     .L2
+""")
+
+# -O3 AVX listing compiled for Skylake (Table VI; unroll 8)
+PI_SKL_O3 = marked("""
+.L2:
+        vextracti128    $0x1, %ymm2, %xmm1
+        vcvtdq2pd       %xmm2, %ymm0
+        vaddpd  %ymm7, %ymm0, %ymm0
+        addl    $1, %eax
+        vcvtdq2pd       %xmm1, %ymm1
+        vaddpd  %ymm7, %ymm1, %ymm1
+        vpaddd  %ymm8, %ymm2, %ymm2
+        vmulpd  %ymm6, %ymm0, %ymm0
+        vmulpd  %ymm6, %ymm1, %ymm1
+        vfmadd132pd     %ymm0, %ymm5, %ymm0
+        vfmadd132pd     %ymm1, %ymm5, %ymm1
+        vdivpd  %ymm0, %ymm4, %ymm0
+        vdivpd  %ymm1, %ymm4, %ymm1
+        vaddpd  %ymm1, %ymm0, %ymm0
+        vaddpd  %ymm0, %ymm3, %ymm3
+        cmpl    $125000000, %eax
+        jne     .L2
+""")
+
+# Reconstructed -O3 for Zen (znver1 vectorizes 128-bit; unroll 2)
+PI_ZEN_O3 = marked("""
+.L2:
+        vcvtdq2pd       %xmm2, %xmm0
+        vaddpd  %xmm6, %xmm0, %xmm0
+        vpaddd  %xmm7, %xmm2, %xmm2
+        addl    $1, %eax
+        vmulpd  %xmm5, %xmm0, %xmm0
+        vfmadd132pd     %xmm0, %xmm4, %xmm0
+        vdivpd  %xmm0, %xmm3, %xmm0
+        vaddpd  %xmm0, %xmm1, %xmm1
+        cmpl    $500000000, %eax
+        jne     .L2
+""")
+
+# --------------------------------------------------------------------- #
+# Expected values from the paper
+# --------------------------------------------------------------------- #
+
+# Table I: OSACA/IACA triad predictions per *assembly* iteration.
+# (compiled_for, flag): (unroll, osaca_zen, osaca_skl, iaca_skl|None)
+TABLE1 = {
+    ("skl", "O1"): (1, 2.00, 2.00, 2.24),
+    ("skl", "O2"): (1, 2.00, 2.00, 2.00),
+    ("skl", "O3"): (4, 4.00, 2.00, 2.21),
+    ("zen", "O1"): (1, 2.00, 2.00, 2.24),
+    ("zen", "O2"): (1, 2.00, 2.00, 2.00),
+    ("zen", "O3"): (2, 2.00, 2.00, 2.21),
+}
+
+TRIAD_KERNELS = {
+    ("skl", "O1"): TRIAD_SCALAR, ("skl", "O2"): TRIAD_SCALAR,
+    ("skl", "O3"): TRIAD_SKL_O3,
+    ("zen", "O1"): TRIAD_SCALAR, ("zen", "O2"): TRIAD_SCALAR,
+    ("zen", "O3"): TRIAD_ZEN_O3,
+}
+
+# Table II: per-port totals, SKL model on TRIAD_SKL_O3
+TABLE2_TOTALS = {"0": 1.25, "0DV": 0.0, "1": 1.25, "2": 2.00, "3": 2.00,
+                 "4": 1.00, "5": 0.75, "6": 0.75, "7": 0.00}
+
+# Table III: measured cy/it (executed_on, compiled_for, flag) -> cy/it
+TABLE3_MEASURED = {
+    ("zen", "zen", "O1"): 2.00, ("zen", "zen", "O2"): 2.00,
+    ("zen", "zen", "O3"): 1.02,
+    ("skl", "zen", "O1"): 2.03, ("skl", "zen", "O2"): 2.04,
+    ("skl", "zen", "O3"): 1.03,
+    ("zen", "skl", "O1"): 2.01, ("zen", "skl", "O2"): 2.01,
+    ("zen", "skl", "O3"): 1.01,
+    ("skl", "skl", "O1"): 2.04, ("skl", "skl", "O2"): 2.03,
+    ("skl", "skl", "O3"): 0.53,
+}
+
+# Table IV: per-port totals, Zen model on TRIAD_ZEN_O3 (visible occupation;
+# the first load's AGU uops are hidden behind the store)
+TABLE4_TOTALS = {"0": 1.25, "1": 1.25, "2": 0.75, "3": 0.75, "3DV": 0.0,
+                 "4": 0.75, "5": 0.75, "6": 0.75, "7": 0.75,
+                 "8": 2.00, "9": 2.00}
+
+# Table V: pi benchmark, cy per *source* iteration
+# (arch, flag): (unroll, iaca, osaca, measured)
+TABLE5 = {
+    ("skl", "O1"): (1, 3.91, 4.75, 9.02),
+    ("skl", "O2"): (1, 4.00, 4.25, 4.00),
+    ("skl", "O3"): (8, 2.00, 2.00, 2.06),
+    ("zen", "O1"): (1, None, 4.00, 11.48),
+    ("zen", "O2"): (1, None, 4.00, 4.96),
+    ("zen", "O3"): (2, None, 2.00, 2.44),
+}
+
+PI_KERNELS = {
+    ("skl", "O1"): PI_O1, ("skl", "O2"): PI_O2, ("skl", "O3"): PI_SKL_O3,
+    ("zen", "O1"): PI_O1, ("zen", "O2"): PI_O2, ("zen", "O3"): PI_ZEN_O3,
+}
+
+# Table VI: per-port totals, SKL model on PI_SKL_O3
+TABLE6_TOTALS = {"0": 8.83, "0DV": 16.0, "1": 4.83, "2": 0.0, "3": 0.0,
+                 "4": 0.0, "5": 3.83, "6": 0.50, "7": 0.0}
+
+# Table VII: per-port totals, SKL model on PI_O2
+TABLE7_TOTALS = {"0": 4.25, "0DV": 4.00, "1": 3.25, "2": 0.0, "3": 0.0,
+                 "4": 0.0, "5": 1.75, "6": 0.75, "7": 0.0}
+
+# Sec. II-C FMA example: measured latency / reciprocal TP
+FMA_EXAMPLE = {
+    "zen": {"latency": 5.0, "throughput": 0.5, "ports": ("0", "1", "8", "9")},
+    "skl": {"latency": 4.0, "throughput": 0.5, "ports": ("0", "1", "2", "3")},
+}

@@ -1,0 +1,77 @@
+"""Generic out-of-order port model (paper Fig. 1).
+
+A machine is a set of named *ports*; each port accepts one micro-op per
+cycle.  Instruction forms decompose into :class:`Uop` objects, each eligible
+on a set of ports and occupying whichever port it is scheduled on for
+``cycles`` cycles (divider pipes such as Skylake's ``0DV`` are ordinary ports
+whose uops have ``cycles > 1``).
+
+The same abstraction models TPU functional pipes (MXU / VPU / HBM / ICI) in
+``repro.core.arch.tpu_v5e`` — occupation is then measured in seconds rather
+than cycles; the engine is unit-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+
+@dataclass(frozen=True)
+class Uop:
+    """One micro-op: eligible port set + occupation per scheduled port."""
+
+    ports: tuple[str, ...]
+    cycles: float = 1.0
+    # Zen AGU pairing (paper Sec. III-A): a load's AGU uop may be hidden
+    # behind a store's AGU slot.  Marked uops are candidates for hiding.
+    hideable_load: bool = False
+    # Tag used by reports ("load", "store-agu", "store-data", "div", ...).
+    kind: str = ""
+
+    def scaled(self, factor: float) -> "Uop":
+        return dataclasses.replace(self, cycles=self.cycles * factor)
+
+
+def U(ports: str, cycles: float = 1.0, *, hideable_load: bool = False,
+      kind: str = "") -> Uop:
+    """Shorthand: ``U("2|3")`` = 1-cycle uop eligible on ports 2 and 3."""
+    return Uop(tuple(ports.split("|")), cycles, hideable_load, kind)
+
+
+@dataclass(frozen=True)
+class PortModel:
+    """A named machine: port list plus scheduling peculiarities."""
+
+    name: str
+    ports: tuple[str, ...]
+    # Ports rendered as "<p> - DV" style divider pipes in reports.
+    divider_ports: frozenset[str] = frozenset()
+    # Zen rule: each store instruction lets one load instruction's AGU
+    # uops execute in its shadow (they are shown parenthesised and excluded
+    # from port totals).
+    store_hides_load: bool = False
+    # Measurement unit for occupation (cycles for CPUs, seconds for TPU).
+    unit: str = "cy"
+    frequency_hz: float | None = None
+
+    def __post_init__(self) -> None:
+        if len(set(self.ports)) != len(self.ports):
+            raise ValueError(f"duplicate ports in model {self.name}")
+
+    def validate_uops(self, uops: Iterable[Uop]) -> None:
+        known = set(self.ports)
+        for uop in uops:
+            unknown = set(uop.ports) - known
+            if unknown:
+                raise ValueError(
+                    f"uop references unknown ports {sorted(unknown)} "
+                    f"(model {self.name} has {self.ports})")
+
+    def zero_occupation(self) -> dict[str, float]:
+        return {p: 0.0 for p in self.ports}
+
+
+def merge_occupation(dst: dict[str, float], src: Mapping[str, float]) -> None:
+    for port, occ in src.items():
+        dst[port] = dst.get(port, 0.0) + occ

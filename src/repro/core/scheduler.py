@@ -1,0 +1,138 @@
+"""Port-assignment schedulers.
+
+``uniform``  — the paper's assumption (2): every eligible port of a uop is
+used with equal probability.  This is what OSACA 0.2 implements and what the
+paper's Tables II/IV/VI/VII show.
+
+``balanced`` — beyond-paper: minimise the maximum port load (what IACA's
+undisclosed weighting approximates, paper Sec. III-A: "IACA does not schedule
+instruction forms with an average probability but weighs specific ports").
+Solved exactly as a fractional scheduling LP via binary search on the
+bottleneck C + max-flow feasibility (uop -> eligible ports, port cap C).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+from .ports import PortModel, Uop
+
+
+@dataclass
+class ScheduledUop:
+    uop: Uop
+    instr_index: int
+    assignment: dict[str, float]  # port -> occupied cycles
+    hidden: bool = False
+
+
+def schedule_uniform(model: PortModel,
+                     uops: list[tuple[int, Uop]]) -> list[ScheduledUop]:
+    out = []
+    for idx, uop in uops:
+        share = uop.cycles / len(uop.ports)
+        out.append(ScheduledUop(uop, idx, {p: share for p in uop.ports}))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Exact min-max fractional scheduling (max-flow feasibility)
+# --------------------------------------------------------------------------
+
+class _Flow:
+    """Tiny float max-flow (BFS augmenting paths); graphs here are < 100
+    nodes so asymptotics are irrelevant."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.cap: list[dict[int, float]] = [defaultdict(float)
+                                            for _ in range(n)]
+
+    def add(self, u: int, v: int, c: float) -> None:
+        self.cap[u][v] += c
+        self.cap[v].setdefault(u, 0.0)
+
+    def maxflow(self, s: int, t: int, eps: float = 1e-12) -> float:
+        total = 0.0
+        while True:
+            parent = {s: s}
+            queue = [s]
+            while queue and t not in parent:
+                u = queue.pop(0)
+                for v, c in self.cap[u].items():
+                    if c > eps and v not in parent:
+                        parent[v] = u
+                        queue.append(v)
+            if t not in parent:
+                return total
+            # bottleneck along path
+            v, bottleneck = t, float("inf")
+            while v != s:
+                u = parent[v]
+                bottleneck = min(bottleneck, self.cap[u][v])
+                v = u
+            v = t
+            while v != s:
+                u = parent[v]
+                self.cap[u][v] -= bottleneck
+                self.cap[v][u] += bottleneck
+                v = u
+            total += bottleneck
+
+
+def schedule_balanced(model: PortModel,
+                      uops: list[tuple[int, Uop]],
+                      iterations: int = 50) -> list[ScheduledUop]:
+    if not uops:
+        return []
+    ports = list(model.ports)
+    pindex = {p: i for i, p in enumerate(ports)}
+    n_uops = len(uops)
+    total = sum(u.cycles for _, u in uops)
+    lo = max(u.cycles for _, u in uops if len(u.ports) == 1) \
+        if any(len(u.ports) == 1 for _, u in uops) else 0.0
+    lo = max(lo, total / len(ports))
+    hi = total
+
+    def feasible(C: float) -> _Flow | None:
+        # nodes: 0 = src, 1..n_uops = uops, then ports, then sink
+        fl = _Flow(1 + n_uops + len(ports) + 1)
+        sink = 1 + n_uops + len(ports)
+        need = 0.0
+        for i, (_, uop) in enumerate(uops):
+            fl.add(0, 1 + i, uop.cycles)
+            need += uop.cycles
+            for p in uop.ports:
+                fl.add(1 + i, 1 + n_uops + pindex[p], uop.cycles)
+        for p in ports:
+            fl.add(1 + n_uops + pindex[p], sink, C)
+        got = fl.maxflow(0, sink)
+        return fl if got >= need - 1e-9 else None
+
+    best_flow = feasible(hi)
+    assert best_flow is not None
+    for _ in range(iterations):
+        mid = 0.5 * (lo + hi)
+        fl = feasible(mid)
+        if fl is not None:
+            best_flow, hi = fl, mid
+        else:
+            lo = mid
+    # recover per-uop assignment from residual graph: flow on edge
+    # (uop -> port) = cap added originally - residual remaining
+    out = []
+    for i, (idx, uop) in enumerate(uops):
+        assignment: dict[str, float] = {}
+        for p in uop.ports:
+            pnode = 1 + n_uops + pindex[p]
+            sent = uop.cycles - best_flow.cap[1 + i][pnode]
+            if sent > 1e-9:
+                assignment[p] = sent
+        out.append(ScheduledUop(uop, idx, assignment))
+    return out
+
+
+SCHEDULERS = {
+    "uniform": schedule_uniform,
+    "balanced": schedule_balanced,
+}

@@ -1,0 +1,130 @@
+"""Flash-attention forward as a Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md §3): the GPU kernel's warp-level shuffles
+become MXU tile matmuls with VMEM-resident online-softmax state; the grid's
+last dimension (kv blocks) executes sequentially per TPU core, so the
+running (m, l, acc) state lives in VMEM scratch across grid steps instead
+of registers.
+
+Layout: q, k, v are (B, H, S, D) (the ops.py wrapper transposes from the
+model's (B, S, H, D)).  Grid = (B, Hq, nq, nkv); BlockSpecs stream one
+(block_q x D) query tile and one (block_k x D) KV tile into VMEM per step;
+block sizes default to 512 x 128-aligned tiles so MXU matmuls are
+hardware-aligned and the working set (q + k + v + scores + acc ~ 4-8 MB at
+D<=256) fits the 16 MiB VMEM budget.
+
+Causal masking skips fully-masked kv blocks via ``pl.when`` (no MXU work
+issued), halving the causal FLOPs — the optimization the XLA reference
+path cannot express with a static scan (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, n_kv: int,
+            causal: bool, window: int, softcap: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    # skip fully-masked blocks (strictly above the causal diagonal or
+    # entirely left of the sliding window)
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window:
+        run = jnp.logical_and(
+            run, k_start + block_k - 1 >= q_start - window + 1) \
+            if causal else (k_start + block_k - 1 >= q_start - window + 1)
+
+    @pl.when(run if not isinstance(run, bool) else True)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale   # (bq, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int = 0,
+                         softcap: float = 0.0, block_q: int = 512,
+                         block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq = G * Hkv."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nkv = S // block_q, S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv=nkv, causal=causal, window=window, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper: model layout (B,S,H,D) <-> kernel layout
+(B,H,S,D); interpret mode auto-selected off-TPU so the same call site
+works in tests, on CPU and on real hardware."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_k: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B,S,Hq,D); k,v: (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=bool(interpret))
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel ((B,H,S,D) layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B,Hq,S,D); k,v: (B,Hkv,S,D).  fp32 math, exact softmax."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, S, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / (D ** 0.5)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, S, D).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the grouped expert GEMM kernel."""
+from functools import partial
+
+import jax
+
+from .moe_gmm import grouped_matmul as _gmm
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_d", "block_f",
+                                   "interpret"))
+def grouped_matmul(x, w, *, block_c: int = 128, block_d: int = 512,
+                   block_f: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _gmm(x, w, block_c=block_c, block_d=block_d, block_f=block_f,
+                interpret=bool(interpret))

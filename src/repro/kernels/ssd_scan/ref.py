@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunk scan: the naive O(S) recurrence
+    h_t = exp(dA_t) h_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t . h_t
+computed step by step (no chunking) — ground truth for both the Pallas
+kernel and the chunked XLA path in repro.models.ssm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, da, dt, bm, cm):
+    """x: (B,H,S,P); da, dt: (B,H,S); bm, cm: (B,S,N) -> y (B,H,S,P)."""
+    B, H, S, P = x.shape
+    N = bm.shape[-1]
+
+    def step(h, inp):
+        xt, dat, dtt, bt, ct = inp
+        # h: (B,H,P,N)
+        h = h * jnp.exp(dat)[..., None, None] + \
+            (xt * dtt[..., None])[..., :, None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (x.transpose(2, 0, 1, 3), da.transpose(2, 0, 1),
+          dt.transpose(2, 0, 1), bm.transpose(1, 0, 2),
+          cm.transpose(1, 0, 2))
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)

@@ -1,0 +1,204 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, record memory/cost analysis and the
+port-model roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+MUST be invoked as its own process (the XLA_FLAGS lines below run before
+any jax import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k [--multi-pod] [--out results.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.hlo.analyzer import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.models.config import SHAPES
+from repro.parallel.sharding import make_rules
+
+# ---- skip table (see DESIGN.md §4) -----------------------------------
+FULL_ATTENTION = {"kimi-k2-1t-a32b", "grok-1-314b", "qwen1.5-32b",
+                  "nemotron-4-340b", "qwen2.5-3b", "llava-next-34b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cell_skip_reason(arch: str, shape: str) -> str | None:
+    if arch in ENCODER_ONLY and shape in ("decode_32k", "long_500k"):
+        return "encoder-only: no autoregressive decode step"
+    if arch in FULL_ATTENTION and shape == "long_500k":
+        return "pure full attention: 524k dense-KV decode not deployable"
+    return None
+
+
+def _coerce(value: str):
+    if value.lower() in ("true", "false"):
+        return value.lower() == "true"
+    try:
+        return int(value)
+    except ValueError:
+        pass
+    try:
+        return float(value)
+    except ValueError:
+        return value
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_text: bool = False,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_updates(**overrides)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "overrides": overrides or {},
+    }
+    skip = cell_skip_reason(arch, shape_name)
+    if skip:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        return record
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh)
+    n_chips = mesh.devices.size
+    with mesh:
+        step = build_step(cfg, shape, rules)
+        lowered = step.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+
+    analysis = analyze_hlo(text)
+    record.update({
+        "status": "ok",
+        "step": step.name,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed", "utilization")
+                          if k in cost},
+        "portmodel": {
+            "flops_per_device": analysis.flops,
+            "mxu_flops_per_device": analysis.mxu_flops,
+            "hbm_bytes_per_device": analysis.hbm_bytes,
+            "ici_bytes_per_device": analysis.ici_bytes,
+            "compute_s": analysis.terms.compute_s,
+            "memory_s": analysis.terms.memory_s,
+            "collective_s": analysis.terms.collective_s,
+            "bound_overlap_s": analysis.terms.bound_overlap,
+            "bound_serial_s": analysis.terms.bound_serial,
+            "dominant": analysis.terms.dominant,
+            "collectives": {k: list(v) for k, v in
+                            analysis.collective_breakdown.items()},
+        },
+    })
+    if keep_text:
+        record["hlo_text"] = text
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape x mesh) cell")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VALUE", dest="overrides",
+                    help="ModelConfig override, e.g. --set remat=dots "
+                         "--set tp_shard_map=true (perf iterations)")
+    args = ap.parse_args(argv)
+    overrides = {}
+    for kv in args.overrides:
+        k, _, v = kv.partition("=")
+        overrides[k] = _coerce(v)
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape required unless --all")
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    results = []
+    failures = 0
+    for arch, shape, mp in cells:
+        label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+        print(f"=== {label}", flush=True)
+        try:
+            rec = run_cell(arch, shape, mp, keep_text=args.print_hlo,
+                           overrides=overrides)
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        results.append(rec)
+        if rec["status"] == "ok":
+            pm = rec["portmodel"]
+            print(f"  ok: step={rec['step']} compile={rec['compile_s']}s "
+                  f"temp={rec['memory'].get('temp_size_in_bytes', 0) / 2**30:.2f}GiB/dev "
+                  f"dominant={pm['dominant']} "
+                  f"bound={pm['bound_overlap_s'] * 1e3:.2f}ms", flush=True)
+            print(f"  memory_analysis: {rec['memory']}")
+            print(f"  cost_analysis:   {rec['cost_analysis']}")
+        elif rec["status"] == "skipped":
+            print(f"  skipped: {rec['reason']}")
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    print(f"done: {sum(r['status'] == 'ok' for r in results)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in results)} skipped, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,245 @@
+"""Step builders: jit-able train / prefill / decode / encode steps with
+their input/output shardings and ShapeDtypeStruct stand-ins (no device
+allocation — the dry-run path)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import (abstract_cache, abstract_params, decode_step,
+                          encode, model_schema, prefill, train_loss)
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.transformer import AUDIO_FRAME_DIM
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.sharding import (ShardingRules, batch_shardings,
+                                     cache_shardings, compute_specs,
+                                     param_shardings)
+
+
+# --------------------------------------------------------------------- #
+# Input specs (ShapeDtypeStructs) per (config x shape cell)
+# --------------------------------------------------------------------- #
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"token": sds((B, 1), jnp.int32),
+                "pos": sds((), jnp.int32)}
+    batch: dict = {}
+    if cfg.modality == "audio":
+        batch["frames"] = sds((B, S, AUDIO_FRAME_DIM), jnp.bfloat16)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if cfg.modality == "vision":
+        batch["patches"] = sds((B, cfg.n_patches, cfg.d_model),
+                               jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+@dataclass
+class Step:
+    name: str
+    fn: Callable                      # jit-ready python callable
+    args: tuple                       # abstract example arguments
+    in_shardings: tuple
+    out_shardings: Any
+    rules: ShardingRules | None = None
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings)
+
+    def lower(self):
+        from repro.parallel.sharding import activation_sharding
+        with activation_sharding(self.rules):
+            return self.jitted().lower(*self.args)
+
+
+# --------------------------------------------------------------------- #
+# Builders
+# --------------------------------------------------------------------- #
+
+def _state_shardings(cfg: ModelConfig, rules: ShardingRules):
+    schema = model_schema(cfg)
+    pshard = param_shardings(schema, rules)
+    return {
+        "params": pshard,
+        "opt": {"m": pshard, "v": pshard,
+                "step": NamedSharding(rules.mesh, P())},
+    }
+
+
+def abstract_state(cfg: ModelConfig, opt: AdamWConfig):
+    params = abstract_params(model_schema(cfg))
+    opt_state = jax.eval_shape(partial(adamw_init, cfg=opt), params)
+    return {"params": params, "opt": opt_state}
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                         rules: ShardingRules,
+                         act_budget_bytes: float = 3e9) -> int:
+    """Gradient-accumulation factor so per-device scan-saved activations
+    (one (B/dp, S, d) residual per layer) stay under the budget."""
+    per_dev = (shape.global_batch / max(rules.data_size, 1)) \
+        * shape.seq_len * cfg.d_model * 2 * (cfg.n_layers + 2)
+    if cfg.seq_shard_residual:
+        per_dev /= max(rules.model_size, 1)
+    # every microbatch must still divide the data axis, or activations
+    # lose their batch sharding entirely (measured 180 GiB/dev on
+    # nemotron-4 before this cap)
+    n_max = max(1, shape.global_batch // max(rules.data_size, 1))
+    n = 1
+    while per_dev / n > act_budget_bytes and n < n_max:
+        n *= 2
+    return min(n, n_max)
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                     rules: ShardingRules,
+                     opt: AdamWConfig | None = None,
+                     microbatches: int | None = None) -> Step:
+    opt = opt or AdamWConfig(
+        moment_dtype=jnp.bfloat16 if cfg.optimizer_dtype == "bfloat16"
+        else jnp.float32)
+    if microbatches is None and cfg.train_microbatches:
+        microbatches = cfg.train_microbatches
+    n_micro = microbatches if microbatches is not None \
+        else default_microbatches(cfg, shape, rules)
+    specs = compute_specs(model_schema(cfg), rules)
+
+    def split_micro(x):
+        B = x.shape[0]
+        return x.reshape(n_micro, B // n_micro, *x.shape[1:])
+
+    def train_step(state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(train_loss)(
+                state["params"], batch, cfg, specs)
+        else:
+            micro = jax.tree.map(split_micro, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32),
+                state["params"])
+
+            def accum(carry, mb):
+                tot_loss, tot_grad = carry
+                loss, grads = jax.value_and_grad(train_loss)(
+                    state["params"], mb, cfg, specs)
+                tot_grad = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32),
+                    tot_grad, grads)
+                return (tot_loss + loss, tot_grad), None
+
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zero), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        params, opt_state, gnorm = adamw_update(
+            state["params"], grads, state["opt"], opt)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return {"params": params, "opt": opt_state}, metrics
+
+    st_shard = _state_shardings(cfg, rules)
+    batch = input_specs(cfg, shape)
+    b_shard = batch_shardings(batch, rules)
+    repl = NamedSharding(rules.mesh, P())
+    return Step(
+        name="train_step", fn=train_step,
+        args=(abstract_state(cfg, opt), batch),
+        in_shardings=(st_shard, b_shard),
+        out_shardings=(st_shard, {"loss": repl, "grad_norm": repl}),
+        rules=rules)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: ShardingRules) -> Step:
+    batch = input_specs(cfg, shape)
+    b_shard = batch_shardings(batch, rules)
+    schema = model_schema(cfg)
+    p_shard = param_shardings(schema, rules)
+    params = abstract_params(schema)
+
+    specs = compute_specs(schema, rules)
+    if cfg.encoder_only:
+        def encode_step(params, batch):
+            return encode(params, batch, cfg, specs)
+        logits_shard = NamedSharding(
+            rules.mesh, P(rules.data_axes, None, None))
+        return Step("encode_step", encode_step, (params, batch),
+                    (p_shard, b_shard), logits_shard, rules=rules)
+
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, param_specs=specs)
+
+    # cache sharding derived from the abstract output structure.
+    # NOTE: must trace inside the activation context — JAX caches the
+    # jaxpr per function object, and a context-less eval_shape here would
+    # be reused by .lower(), silently dropping every sharding constraint
+    # and the shard_map MoE path (observed: jamba prefill fell back to
+    # the naive dispatch with 16 GB f32 all-reduces per layer).
+    from repro.parallel.sharding import activation_sharding
+    with activation_sharding(rules):
+        out_abstract = jax.eval_shape(prefill_step, params, batch)
+    logits_a, cache_a = out_abstract
+    c_shard = cache_shardings(cache_a, rules, shape.global_batch)
+    # prefix caches are unstacked
+    if cache_a["prefix"]:
+        c_shard["prefix"] = cache_shardings(
+            cache_a["prefix"], rules, shape.global_batch, stacked=False)
+    logits_shard = NamedSharding(rules.mesh, P(rules.data_axes))
+    return Step("prefill_step", prefill_step, (params, batch),
+                (p_shard, b_shard), (logits_shard, c_shard), rules=rules)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
+                      rules: ShardingRules) -> Step:
+    if rules.stationary_weights is False and \
+            shape.global_batch < rules.data_size:
+        # single-sequence decode cannot occupy the data axes with batch;
+        # keep weights fully sharded (stationary) and reduce the tiny
+        # per-token partial sums instead of gathering weights per token
+        from repro.parallel.sharding import make_rules as _mk
+        rules = _mk(rules.mesh, fsdp=rules.fsdp, stationary_weights=True)
+    schema = model_schema(cfg)
+    p_shard = param_shardings(schema, rules)
+    params = abstract_params(schema)
+    B, S = shape.global_batch, shape.seq_len
+    cache = abstract_cache(cfg, B, S)
+    c_shard = cache_shardings(cache, rules, B)
+    if cache["prefix"]:
+        c_shard["prefix"] = cache_shardings(cache["prefix"], rules, B,
+                                            stacked=False)
+    inputs = input_specs(cfg, shape)
+    tok_shard = batch_shardings(inputs, rules)
+
+    specs = compute_specs(schema, rules)
+
+    def serve_step(params, token, pos, cache):
+        return decode_step(params, token, pos, cache, cfg,
+                           param_specs=specs)
+
+    logits_shard = NamedSharding(
+        rules.mesh,
+        P(rules.data_axes) if B % rules.data_size == 0 else P())
+    return Step(
+        "serve_step", serve_step,
+        (params, inputs["token"], inputs["pos"], cache),
+        (p_shard, tok_shard["token"], tok_shard["pos"], c_shard),
+        (logits_shard, c_shard), rules=rules)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig,
+               rules: ShardingRules) -> Step:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, rules)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, rules)
+    return build_decode_step(cfg, shape, rules)

@@ -1,0 +1,6 @@
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .schema import (abstract_params, init_params, logical_axes,
+                     param_count, PSpec)
+from .transformer import (count_params, decode_step, encode, forward,
+                          init_cache, abstract_cache, model_schema,
+                          prefill, train_loss)

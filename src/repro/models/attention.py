@@ -1,0 +1,188 @@
+"""Attention: RoPE, GQA, chunked online-softmax (flash-style in XLA),
+sliding-window, decode-with-cache.
+
+The chunked path is the dry-run/roofline path: it never materialises the
+(S x S) score matrix (inner/outer scans keep the live set to one
+(chunk_q x chunk_kv) tile), which is what makes prefill_32k compile within
+per-device memory.  The Pallas kernel in ``repro.kernels.flash_attention``
+implements the same math for TPU; ``ref.py`` cross-checks both.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------- #
+# RoPE
+# ---------------------------------------------------------------------- #
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def _softcap(s: jax.Array, cap: float) -> jax.Array:
+    if cap > 0.0:
+        return cap * jnp.tanh(s / cap)
+    return s
+
+
+# ---------------------------------------------------------------------- #
+# Chunked (online-softmax) attention — training & prefill
+# ---------------------------------------------------------------------- #
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      chunk_q: int = 1024, chunk_kv: int = 1024,
+                      softcap: float = 0.0,
+                      causal_skip: bool = False) -> jax.Array:
+    """q: (B,S,Hq,D)  k,v: (B,S,Hkv,D), Hq = G*Hkv.  Returns (B,S,Hq,D).
+
+    ``causal_skip``: use a dynamic-bound ``fori_loop`` over kv chunks so
+    strictly-upper-triangular chunk pairs are never computed (inference
+    only — dynamic bounds are not reverse-mode differentiable).
+    """
+    B, S_orig, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    cq = min(chunk_q, S_orig)
+    ckv = min(chunk_kv, S_orig)
+    # pad to a chunk multiple; padded key positions are masked out below
+    import math
+    lcm = cq * ckv // math.gcd(cq, ckv)
+    S = -(-S_orig // lcm) * lcm
+    if S != S_orig:
+        padding = ((0, 0), (0, S - S_orig), (0, 0), (0, 0))
+        q = jnp.pad(q, padding)
+        k = jnp.pad(k, padding)
+        v = jnp.pad(v, padding)
+    nq, nkv = S // cq, S // ckv
+    scale = 1.0 / (D ** 0.5)
+    valid_len = S_orig
+
+    # (B,S,Hkv,G,D) -> chunked (nq,B,cq,Hkv,G,D)
+    qc = q.reshape(B, nq, cq, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nkv, ckv, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nkv, ckv, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def q_chunk_body(qi, q_blk):
+        # online-softmax accumulators, fp32
+        m0 = jnp.full((B, cq, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cq, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, cq, Hkv, G, D), jnp.float32)
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk = kc[ki], vc[ki]
+            kpos = ki * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            s = _softcap(s, softcap)
+            mask = (kpos < valid_len)[None, :] * jnp.ones((cq, 1), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        if causal and causal_skip:
+            # dynamic upper bound: only chunk pairs with kpos <= max qpos
+            hi = (qi * cq + cq + ckv - 1) // ckv
+            def fori_body(ki, carry):
+                c, _ = kv_step(carry, ki)
+                return c
+            m, l, acc = lax.fori_loop(0, hi, fori_body, (m0, l0, a0))
+        else:
+            lo = 0
+            if window and not causal:
+                lo = 0
+            (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    out = lax.map(lambda args: q_chunk_body(*args),
+                  (jnp.arange(nq), qc))
+    # (nq,B,cq,Hkv,G,D) -> (B,S,Hq,D)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, Hq, D)
+    return out[:, :S_orig] if S != S_orig else out
+
+
+# ---------------------------------------------------------------------- #
+# Decode attention (single new token against a KV cache)
+# ---------------------------------------------------------------------- #
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, ring: bool = False,
+                     softcap: float = 0.0) -> jax.Array:
+    """q: (B,1,Hq,D); caches: (B,W,Hkv,D); pos: () current position.
+
+    ``ring=True``: the cache is a sliding-window ring buffer — every slot
+    with index < min(pos+1, W) is valid (softmax is permutation-
+    invariant, so ring order is irrelevant).
+    """
+    B, W, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    idx = jnp.arange(W)
+    valid = idx < jnp.minimum(pos + 1, W) if ring else idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Reference (materialises S x S — tests only)
+# ---------------------------------------------------------------------- #
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    s = _softcap(s, softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

@@ -1,0 +1,163 @@
+"""Model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                 # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0              # default d_model // n_heads
+
+    # attention
+    attention: str = "full"      # full | swa
+    window: int = 4096           # sliding-window size (attention == "swa")
+    qkv_bias: bool = False
+    causal: bool = True          # False for encoder-only (hubert)
+    attn_logit_softcap: float = 0.0
+
+    # FFN
+    activation: str = "silu"     # silu | gelu | relu2
+    glu: bool = True             # gated (SwiGLU-style) FFN
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # local tokens dispatched per MoE inner chunk (bounds the per-device
+    # dispatch buffers to chunk*top_k*d regardless of batch size)
+    moe_token_chunk: int = 4096
+    # gradient-accumulation override: 0 = auto from the activation budget
+    train_microbatches: int = 0
+    # first k layers use a dense FFN instead of MoE (Kimi K2 layer 0)
+    n_dense_layers: int = 0
+
+    # SSM / hybrid
+    layer_pattern: str = "attn"  # attn | ssm | jamba (1 attn per group of 8)
+    hybrid_group: int = 8        # layers per hybrid group
+    hybrid_attn_index: int = 3   # position of the attn layer inside a group
+    moe_every: int = 1           # MoE FFN every n-th layer (jamba: 2)
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+
+    # modality frontends (stubs per instructions: precomputed embeddings)
+    modality: str = "text"       # text | audio | vision
+    n_patches: int = 0           # vision: patch embeddings per sample
+    encoder_only: bool = False
+
+    # numerics
+    norm_eps: float = 1e-5
+    rope_theta: float = 1e4
+    dtype: str = "bfloat16"
+    optimizer_dtype: str = "float32"   # m/v dtype; bf16 for trillion-scale
+
+    # runtime knobs (overridable per experiment; see EXPERIMENTS.md §Perf)
+    attn_chunk_q: int = 1024
+    attn_chunk_kv: int = 1024
+    loss_chunk: int = 512
+    remat: str = "full"          # full | dots | none
+    use_pallas: bool = False     # Pallas kernels (TPU); XLA path for dry-run
+    prefill_causal_skip: bool = False  # dynamic-bound kv loop (perf iter)
+    # Megatron-SP style: residual stream sequence-sharded over the model
+    # axis between blocks -> remat-saved activations shrink by the model
+    # size and gradient accumulation becomes unnecessary for most archs
+    # (weight all-gathers then happen once per step, not per microbatch).
+    seq_shard_residual: bool = True
+    # Explicit Megatron-style tensor parallelism via shard_map for the
+    # dense FFN, attention/SSD out-projections: the row-parallel partial
+    # sums are cast to bf16 before the psum, halving the per-layer
+    # activation all-reduce bytes that XLA's auto-SPMD reduces in f32
+    # (§Perf iterations A1/A2 — now the default).
+    tp_shard_map: bool = True
+
+    def __post_init__(self):
+        if self.n_heads and not self.d_head:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def layer_kinds(self) -> list[str]:
+        """Per-layer mixer kind: 'attn' or 'ssm'."""
+        if self.layer_pattern == "attn":
+            return ["attn"] * self.n_layers
+        if self.layer_pattern == "ssm":
+            return ["ssm"] * self.n_layers
+        if self.layer_pattern == "jamba":
+            kinds = []
+            for i in range(self.n_layers):
+                kinds.append("attn" if i % self.hybrid_group ==
+                             self.hybrid_attn_index else "ssm")
+            return kinds
+        raise ValueError(self.layer_pattern)
+
+    def ffn_kinds(self) -> list[str]:
+        """Per-layer FFN kind: 'dense' | 'moe' | 'none'."""
+        out = []
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                out.append("none")       # pure Mamba2: block = mixer only
+            elif self.is_moe and i >= self.n_dense_layers \
+                    and i % self.moe_every == (self.moe_every - 1):
+                out.append("moe")
+            elif self.d_ff > 0 or self.is_moe:
+                out.append("dense")
+            else:
+                out.append("none")
+        return out
+
+    def param_count(self) -> int:
+        """Total parameters (embedding + blocks + head), exact."""
+        from .transformer import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from .transformer import count_params
+        return count_params(self, active_only=True)
+
+    def with_updates(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the assigned input-shape cells."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_training(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

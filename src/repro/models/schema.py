@@ -1,0 +1,73 @@
+"""Parameter schema: single source of truth for shapes, dtypes, logical
+sharding axes and initializers.
+
+A schema is a pytree (nested dicts) of :class:`PSpec` leaves.  From it we
+derive (a) real initialised parameters for smoke tests, (b)
+ShapeDtypeStructs for the dry-run (no allocation), and (c) PartitionSpecs
+via the logical-axis rules in ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]    # logical axis per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"               # normal | zeros | ones
+    scale: float | None = None         # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape,
+                                                      self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_params(schema, key: jax.Array):
+    """Materialise real parameters (used with reduced configs on CPU)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            fan_in = spec.shape[-1] if len(spec.shape) else 1
+            scale = spec.scale if spec.scale is not None \
+                else 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32)
+                        * scale).astype(spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema):
+    """ShapeDtypeStructs — the dry-run path; allocates nothing."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), schema,
+        is_leaf=is_pspec)
+
+
+def logical_axes(schema):
+    """Pytree of logical-axis tuples, mirroring the params tree."""
+    return jax.tree.map(lambda s: s.logical, schema, is_leaf=is_pspec)
+
+
+def param_count(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_pspec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def map_schema(schema, fn):
+    return jax.tree.map(fn, schema, is_leaf=is_pspec)

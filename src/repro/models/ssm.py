@@ -1,0 +1,227 @@
+"""Mamba-2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked algorithm: within a chunk of length Q the recurrence is expanded
+into an attention-like quadratic form (runs on the MXU); across chunks a
+sequential scan passes the (H, P, N) state.  The per-chunk inner kernel is
+the Pallas hot spot (repro.kernels.ssd_scan); this module is the XLA
+reference path used by training, the dry-run and the oracle tests.
+
+Also used (with small d_state) for the Mamba layers of the Jamba hybrid —
+Jamba itself uses Mamba-1; the SSD formulation is the TPU-native adaptation
+(DESIGN.md Sec. 3: MXU-friendly chunked matmuls instead of the GPU
+selective-scan kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain
+
+from .config import ModelConfig
+from .schema import PSpec
+
+
+def ssm_schema(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G, K = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    return {
+        "wz": PSpec((d, di), ("embed", "ff")),
+        "wx": PSpec((d, di), ("embed", "ff")),
+        "wbc": PSpec((d, 2 * G * N), ("embed", None)),
+        "wdt": PSpec((d, H), ("embed", "heads")),
+        "conv_x": PSpec((K, di), (None, "ff")),
+        "conv_bc": PSpec((K, 2 * G * N), (None, None)),
+        "a_log": PSpec((H,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "dt_bias": PSpec((H,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "d_skip": PSpec((H,), ("heads",), dtype=jnp.float32, init="ones"),
+        "norm": PSpec((di,), ("ff",), init="ones"),
+        "out_proj": PSpec((di, d), ("ff", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1], :].astype(jnp.float32) \
+            * w[k].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def _project(params, u, cfg: ModelConfig):
+    """u: (B,S,d) -> z,x,Bm,Cm,dt (post conv/activations) + raw conv
+    inputs (needed for the decode conv-state cache)."""
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = constrain(u @ params["wz"], "batch", None, "model")   # (B,S,di)
+    x_raw = constrain(u @ params["wx"], "batch", None, "model")
+    bc_raw = u @ params["wbc"]                             # (B,S,2GN)
+    dt = u.astype(jnp.float32) @ params["wdt"].astype(jnp.float32)
+    x = _causal_conv(x_raw, params["conv_x"])
+    bc = _causal_conv(bc_raw, params["conv_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                     # (B,S,GN) each
+    dt = jax.nn.softplus(dt + params["dt_bias"])           # (B,S,H)
+    return z, x, Bm, Cm, dt, x_raw, bc_raw
+
+
+def ssd_forward(params: dict, u: jax.Array, cfg: ModelConfig,
+                return_state: bool = False):
+    """Full-sequence forward.  u: (B,S,d) -> (B,S,d)."""
+    B, S_orig, _ = u.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, \
+        cfg.ssm_groups
+    Q = min(cfg.ssm_chunk, S_orig)
+    S = -(-S_orig // Q) * Q
+    if S != S_orig:
+        u = jnp.pad(u, ((0, 0), (0, S - S_orig), (0, 0)))
+    nc = S // Q
+
+    z, x, Bm, Cm, dt, x_raw, bc_raw = _project(params, u, cfg)
+    if S != S_orig:
+        # zero dt on padded steps: da=0 and dt*B*x=0 keep the recurrent
+        # state exact through the padding
+        valid = (jnp.arange(S) < S_orig)[None, :, None]
+        dt = dt * valid
+    xh = x.reshape(B, nc, Q, H, P)
+    Bh = Bm.reshape(B, nc, Q, G, N)
+    Ch = Cm.reshape(B, nc, Q, G, N)
+    dtc = dt.reshape(B, nc, Q, H)
+    A = -jnp.exp(params["a_log"])                          # (H,) negative
+    dA = dtc * A                                           # (B,nc,Q,H)
+
+    # move chunk dim first for the scan
+    xh, Bh, Ch, dtc, dA = (t.transpose(1, 0, 2, 3, 4) if t.ndim == 5
+                           else t.transpose(1, 0, 2, 3)
+                           for t in (xh, Bh, Ch, dtc, dA))
+
+    def chunk_step(h, inp):
+        xq, bq, cq, dtq, daq = inp                # (B,Q,H,P),(B,Q,G,N),...
+        cum = jnp.cumsum(daq, axis=1)             # (B,Q,H)
+        # intra-chunk: y[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H)
+        li = jnp.arange(Q)
+        mask = li[:, None] >= li[None, :]
+        # mask BEFORE exp: above-diagonal seg is positive and overflows,
+        # and grad-through-where would still propagate the inf as NaN
+        seg = jnp.where(mask[None, :, :, None], seg, -1e30)
+        L = jnp.exp(seg)
+        cb = jnp.einsum("bqgn,bkgn->bqkg", cq.astype(jnp.float32),
+                        bq.astype(jnp.float32))           # (B,Q,Q,G)
+        heads_per_group = H // G
+        cbh = jnp.repeat(cb, heads_per_group, axis=-1)    # (B,Q,Q,H)
+        w = cbh * L * dtq[:, None, :, :]                  # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w,
+                             xq.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state, C scaled by the
+        # decay accumulated since the chunk start
+        cqh = jnp.repeat(cq.astype(jnp.float32)[:, :, :, None, :],
+                         heads_per_group, axis=3).reshape(B, Q, H, N)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp",
+                             cqh * jnp.exp(cum)[..., None], h)
+        y = y_intra + y_inter
+        # state update: h' = exp(sum dA) h + sum_j exp(cum_last-cum_j) dt_j B_j x_j
+        total = cum[:, -1:, :]                            # (B,1,H)
+        decay_out = jnp.exp(total - cum)                  # (B,Q,H)
+        bqh = jnp.repeat(bq.astype(jnp.float32)[:, :, :, None, :],
+                         heads_per_group, axis=3).reshape(B, Q, H, N)
+        dS = jnp.einsum("bqhn,bqhp->bhpn",
+                        bqh * (decay_out * dtq)[..., None],
+                        xq.astype(jnp.float32))
+        h_new = h * jnp.exp(total[:, 0, :])[:, :, None, None] + dS
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, ys = lax.scan(chunk_step, h0, (xh, Bh, Ch, dtc, dA))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + params["d_skip"][None, None, :, None] \
+        * x.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, H * P)
+
+    # gated RMSNorm + out projection (Mamba-2 block epilogue)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True)
+                        + cfg.norm_eps)
+    y = (y * rms * params["norm"].astype(jnp.float32)).astype(u.dtype)
+    from repro.parallel.sharding import row_parallel_matmul
+    out = row_parallel_matmul(y, params["out_proj"],
+                              enabled=cfg.tp_shard_map)
+    if S != S_orig:
+        out = out[:, :S_orig]
+    if return_state:
+        K = cfg.ssm_conv
+        state = {
+            "h": h_final,
+            "conv_x": x_raw[:, S_orig - (K - 1):S_orig
+                            ].astype(jnp.bfloat16),
+            "conv_bc": bc_raw[:, S_orig - (K - 1):S_orig
+                              ].astype(jnp.bfloat16),
+        }
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Single-token decode
+# ---------------------------------------------------------------------- #
+
+def ssm_cache_init(cfg: ModelConfig, batch: int):
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, \
+        cfg.ssm_groups
+    K = cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), jnp.bfloat16),
+        "conv_bc": jnp.zeros((batch, K - 1, 2 * G * N), jnp.bfloat16),
+    }
+
+
+def ssd_decode_step(params: dict, u: jax.Array, cache: dict,
+                    cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """u: (B,1,d) -> (B,1,d), updated cache."""
+    B = u.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, \
+        cfg.ssm_groups
+    heads_per_group = H // G
+    z = u @ params["wz"]                                   # (B,1,di)
+    x = u @ params["wx"]
+    bc = u @ params["wbc"]
+    dt = u.astype(jnp.float32) @ params["wdt"].astype(jnp.float32)
+
+    # causal conv with cached window
+    cw_x = jnp.concatenate([cache["conv_x"].astype(x.dtype), x], axis=1)
+    cw_bc = jnp.concatenate([cache["conv_bc"].astype(bc.dtype), bc], axis=1)
+    x = jax.nn.silu((cw_x.astype(jnp.float32)
+                     * params["conv_x"].astype(jnp.float32)).sum(1,
+                     keepdims=True)).astype(x.dtype)
+    bc = jax.nn.silu((cw_bc.astype(jnp.float32)
+                      * params["conv_bc"].astype(jnp.float32)).sum(1,
+                      keepdims=True)).astype(bc.dtype)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])[:, 0]     # (B,H)
+    A = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * A)                                   # (B,H)
+
+    xh = x.reshape(B, H, P).astype(jnp.float32)
+    bh = jnp.repeat(Bm.reshape(B, G, N).astype(jnp.float32)[:, :, None, :],
+                    heads_per_group, axis=2).reshape(B, H, N)
+    ch = jnp.repeat(Cm.reshape(B, G, N).astype(jnp.float32)[:, :, None, :],
+                    heads_per_group, axis=2).reshape(B, H, N)
+    h = cache["h"] * da[:, :, None, None] + \
+        jnp.einsum("bhn,bhp->bhpn", bh * dt[..., None], xh)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, h)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, H * P)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    rms = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True)
+                        + cfg.norm_eps)
+    y = (y * rms * params["norm"].astype(jnp.float32)).astype(u.dtype)
+    out = y @ params["out_proj"]
+    new_cache = {
+        "h": h,
+        "conv_x": cw_x[:, 1:].astype(jnp.bfloat16),
+        "conv_bc": cw_bc[:, 1:].astype(jnp.bfloat16),
+    }
+    return out, new_cache

@@ -1,0 +1,441 @@
+"""Model assembly: embeddings / modality stubs, attention + SSM + MoE
+blocks, layer-stack scan (HLO stays compact for 512-way SPMD compiles on a
+single host core), losses, and the three step kinds (train forward,
+prefill, decode).
+
+Layer stacking: the per-layer (mixer, ffn) plan is folded into its smallest
+period p (dense: p=1; Jamba: p=8 = 7 Mamba + 1 attention with alternating
+dense/MoE FFN); parameters are stacked over n_layers/p groups and the stack
+runs under ``lax.scan`` with configurable remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain, gather_params
+
+from .attention import chunked_attention, decode_attention, rope
+from .config import ModelConfig
+from .moe import dense_ffn, dense_ffn_schema, moe_ffn, moe_schema
+from .schema import PSpec, is_pspec, param_count
+from .ssm import (ssd_decode_step, ssd_forward, ssm_cache_init, ssm_schema)
+
+AUDIO_FRAME_DIM = 512  # conv-stem output dim of the stubbed HuBERT frontend
+
+
+# ---------------------------------------------------------------------- #
+# Schemas
+# ---------------------------------------------------------------------- #
+
+def attn_schema(cfg: ModelConfig) -> dict:
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    sch = {
+        "wq": PSpec((d, Hq * Dh), ("embed", "q_heads")),
+        "wk": PSpec((d, Hkv * Dh), ("embed", "kv_heads")),
+        "wv": PSpec((d, Hkv * Dh), ("embed", "kv_heads")),
+        "wo": PSpec((Hq * Dh, d), ("q_heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = PSpec((Hq * Dh,), ("q_heads",), init="zeros")
+        sch["bk"] = PSpec((Hkv * Dh,), ("kv_heads",), init="zeros")
+        sch["bv"] = PSpec((Hkv * Dh,), ("kv_heads",), init="zeros")
+    return sch
+
+
+def block_schema(cfg: ModelConfig, kind: str, ffn_kind: str) -> dict:
+    d = cfg.d_model
+    sch: dict = {"norm1": PSpec((d,), ("embed",), init="ones")}
+    if kind == "attn":
+        sch["attn"] = attn_schema(cfg)
+    else:
+        sch["ssm"] = ssm_schema(cfg)
+    if ffn_kind != "none":
+        sch["norm2"] = PSpec((d,), ("embed",), init="ones")
+        if ffn_kind == "moe":
+            sch["ffn"] = moe_schema(cfg)
+        else:
+            sch["ffn"] = dense_ffn_schema(cfg)
+    return sch
+
+
+def layer_plan(cfg: ModelConfig):
+    """(prefix_pairs, period_pairs, n_groups): prefix layers run unstacked,
+    the periodic remainder is scanned in groups of len(period_pairs)."""
+    pairs = list(zip(cfg.layer_kinds(), cfg.ffn_kinds()))
+    prefix = pairs[:cfg.n_dense_layers]
+    rest = pairs[cfg.n_dense_layers:]
+    period = len(rest)
+    for p in (1, 2, 4, 8, 16, 32):
+        if p <= len(rest) and len(rest) % p == 0 and \
+                all(rest[i] == rest[i % p] for i in range(len(rest))):
+            period = p
+            break
+    return prefix, rest[:period], len(rest) // period
+
+
+def _stack(schema, n: int):
+    return jax.tree.map(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, logical=("layers",) + s.logical),
+        schema, is_leaf=is_pspec)
+
+
+def model_schema(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    sch: dict = {}
+    if cfg.modality == "audio":
+        sch["frame_proj"] = PSpec((AUDIO_FRAME_DIM, d), (None, "embed"))
+    else:
+        sch["embed"] = PSpec((V, d), ("vocab", "embed"), scale=0.02)
+    if cfg.modality == "vision":
+        # anyres patch embeddings arrive at d_model; learned adapter
+        sch["patch_adapter"] = PSpec((d, d), ("embed", None))
+    prefix, period, n_groups = layer_plan(cfg)
+    sch["prefix"] = [block_schema(cfg, k, f) for k, f in prefix]
+    sch["stack"] = _stack([block_schema(cfg, k, f) for k, f in period],
+                          n_groups)
+    sch["final_norm"] = PSpec((d,), ("embed",), init="ones")
+    sch["lm_head"] = PSpec((d, V), ("embed", "vocab"), scale=0.02)
+    return sch
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    sch = model_schema(cfg)
+    total = param_count(sch)
+    if active_only and cfg.is_moe:
+        # subtract inactive expert weights
+        _, period, n_groups = layer_plan(cfg)
+        moe_layers = sum(1 for _, f in period if f == "moe") * n_groups
+        E, K = cfg.n_experts, cfg.top_k
+        per_expert = cfg.d_model * cfg.d_ff_expert * (3 if cfg.glu else 2)
+        total -= moe_layers * (E - K) * per_expert
+    return total
+
+
+# ---------------------------------------------------------------------- #
+# Norms / embeddings
+# ---------------------------------------------------------------------- #
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_inputs(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.modality == "audio":
+        return batch["frames"].astype(jnp.bfloat16) @ params["frame_proj"]
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.modality == "vision" and "patches" in batch:
+        adapted = batch["patches"].astype(x.dtype) @ params["patch_adapter"]
+        x = lax.dynamic_update_slice(x, adapted, (0, 0, 0))
+    return x
+
+
+# ---------------------------------------------------------------------- #
+# Blocks
+# ---------------------------------------------------------------------- #
+
+def _qkv(p: dict, h: jax.Array, cfg: ModelConfig):
+    B, S, _ = h.shape
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = constrain(q.reshape(B, S, cfg.n_heads, cfg.d_head),
+                  "batch", None, "model", None)
+    k = constrain(k.reshape(B, S, cfg.n_kv_heads, cfg.d_head),
+                  "batch", None, "model", None)
+    v = constrain(v.reshape(B, S, cfg.n_kv_heads, cfg.d_head),
+                  "batch", None, "model", None)
+    return q, k, v
+
+
+def _row_parallel_proj(o_flat: jax.Array, wo: jax.Array,
+                       cfg: ModelConfig) -> jax.Array:
+    """Attention out-projection; with tp_shard_map the heads-sharded
+    activations hit a row-parallel matmul whose bf16 partials are psummed
+    explicitly (halves the f32 all-reduce auto-SPMD emits)."""
+    from repro.parallel.sharding import row_parallel_matmul
+    return row_parallel_matmul(o_flat, wo, enabled=cfg.tp_shard_map)
+
+
+def attention_block(p: dict, h: jax.Array, positions: jax.Array,
+                    cfg: ModelConfig, *, want_cache: bool = False,
+                    cache_window: int = 0):
+    q, k, v = _qkv(p, h, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.window if cfg.attention == "swa" else 0
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        o = flash_attention(q, k, v, causal=cfg.causal, window=window,
+                            softcap=cfg.attn_logit_softcap)
+    else:
+        o = chunked_attention(
+            q, k, v, causal=cfg.causal, window=window,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            softcap=cfg.attn_logit_softcap,
+            causal_skip=cfg.prefill_causal_skip)
+    B, S = h.shape[:2]
+    out = _row_parallel_proj(o.reshape(B, S, -1), p["wo"], cfg)
+    cache = None
+    if want_cache:
+        if cache_window and cache_window < S:
+            k, v = k[:, -cache_window:], v[:, -cache_window:]
+        cache = {"k": k, "v": v}
+    return out, cache
+
+
+def attention_decode(p: dict, h: jax.Array, pos: jax.Array, cache: dict,
+                     cfg: ModelConfig):
+    """h: (B,1,d); cache k/v: (B,W,Hkv,Dh)."""
+    q, k, v = _qkv(p, h, cfg)
+    q = rope(q, pos[None, None], cfg.rope_theta)
+    k = rope(k, pos[None, None], cfg.rope_theta)
+    W = cache["k"].shape[1]
+    ring = cfg.attention == "swa"
+    idx = (pos % W) if ring else pos
+    k_cache = lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+    v_cache = lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos, ring=ring,
+                         softcap=cfg.attn_logit_softcap)
+    out = o.reshape(h.shape[0], 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig, ffn_kind: str):
+    if ffn_kind == "none":
+        return x, 0.0
+    h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if ffn_kind == "moe":
+        B, S, d = h.shape
+        out, aux = moe_ffn(p["ffn"], h.reshape(B * S, d), cfg)
+        return x + out.reshape(B, S, d), aux
+    return x + dense_ffn(p["ffn"], h, cfg), 0.0
+
+
+def block_forward(p: dict, x: jax.Array, positions: jax.Array,
+                  cfg: ModelConfig, kind: str, ffn_kind: str, *,
+                  want_cache: bool = False, cache_window: int = 0):
+    if cfg.seq_shard_residual:
+        x = constrain(x, "batch", "model", None)
+    else:
+        x = constrain(x, "batch", None, None)
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        out, cache = attention_block(p["attn"], h, positions, cfg,
+                                     want_cache=want_cache,
+                                     cache_window=cache_window)
+    else:
+        if want_cache:
+            out, cache = ssd_forward(p["ssm"], h, cfg, return_state=True)
+        else:
+            out, cache = ssd_forward(p["ssm"], h, cfg), None
+    x = x + out
+    x, aux = _ffn_apply(p, x, cfg, ffn_kind)
+    return x, cache, aux
+
+
+def block_decode(p: dict, x: jax.Array, pos: jax.Array, cache: dict,
+                 cfg: ModelConfig, kind: str, ffn_kind: str):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        out, new_cache = attention_decode(p["attn"], h, pos, cache, cfg)
+    else:
+        out, new_cache = ssd_decode_step(p["ssm"], h, cache, cfg)
+    x = x + out
+    x, _ = _ffn_apply(p, x, cfg, ffn_kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------- #
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------- #
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, *,
+            want_cache: bool = False, cache_window: int = 0,
+            param_specs: dict | None = None):
+    """Returns (hidden (B,S,d), caches, aux).  ``param_specs`` (a pytree
+    of use-time PartitionSpecs) enables just-in-time FSDP weight
+    gathering — one all-gather per layer inside the scan (ZeRO-3)."""
+    sp = param_specs or {}
+    top = {k: params[k] for k in params
+           if k not in ("prefix", "stack") and k in sp}
+    if top:
+        gathered = gather_params(top, {k: sp[k] for k in top})
+        params = {**params, **gathered}
+    x = embed_inputs(params, batch, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    prefix, period, n_groups = layer_plan(cfg)
+
+    caches: dict = {"prefix": [], "stack": None}
+    aux = jnp.zeros((), jnp.float32)
+    for i, (p, (kind, fk)) in enumerate(zip(params["prefix"], prefix)):
+        if sp:
+            p = gather_params(p, sp["prefix"][i])
+        x, c, a = block_forward(p, x, positions, cfg, kind, fk,
+                                want_cache=want_cache,
+                                cache_window=cache_window)
+        caches["prefix"].append(c)
+        aux = aux + a
+
+    def group_body(carry, gp):
+        x, aux = carry
+        if sp:
+            gp = gather_params(gp, sp["stack"])
+        group_caches = []
+        for j, (kind, fk) in enumerate(period):
+            x, c, a = block_forward(gp[j], x, positions, cfg, kind, fk,
+                                    want_cache=want_cache,
+                                    cache_window=cache_window)
+            group_caches.append(c)
+            aux = aux + a
+        return (x, aux), group_caches
+
+    body = _remat(group_body, cfg)
+    (x, aux), stack_caches = lax.scan(body, (x, aux), params["stack"])
+    caches["stack"] = stack_caches
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux
+
+
+def chunked_ce_loss(x: jax.Array, head: jax.Array, labels: jax.Array,
+                    chunk: int) -> jax.Array:
+    """Cross-entropy without materialising (B,S,V): scan over seq chunks."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    n = S // c
+    xc = x.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute chunk logits in backward: (B,c,V) never saved
+    def step_inner(xb, lb):
+        logits = (xb @ head).astype(jnp.float32)          # (B,c,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def step(tot, inp):
+        xb, lb = inp
+        return tot + step_inner(xb, lb), None
+
+    total, _ = lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)
+
+
+def train_loss(params: dict, batch: dict, cfg: ModelConfig,
+               param_specs: dict | None = None) -> jax.Array:
+    x, _, aux = forward(params, batch, cfg, param_specs=param_specs)
+    head = params["lm_head"]
+    if param_specs:
+        head = gather_params(head, param_specs["lm_head"])
+    loss = chunked_ce_loss(x, head, batch["labels"], cfg.loss_chunk)
+    return loss + 0.01 * aux
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, *,
+            cache_len: int = 0, param_specs: dict | None = None):
+    """Run the prompt; return (last-token logits, caches)."""
+    window = cfg.window if cfg.attention == "swa" else 0
+    x, caches, _ = forward(params, batch, cfg, want_cache=True,
+                           cache_window=window or cache_len,
+                           param_specs=param_specs)
+    logits = (x[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+    return logits, caches
+
+
+def encode(params: dict, batch: dict, cfg: ModelConfig,
+           param_specs: dict | None = None):
+    """Encoder-only forward (hubert): per-position class logits."""
+    x, _, _ = forward(params, batch, cfg, param_specs=param_specs)
+    return (x @ params["lm_head"]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------- #
+# Decode
+# ---------------------------------------------------------------------- #
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree matching the layer plan.  Attention layers get
+    (B, W, Hkv, Dh) k/v buffers (W = sliding window for SWA); SSM layers
+    get their recurrent state."""
+    prefix, period, n_groups = layer_plan(cfg)
+    W = min(cfg.window, max_len) if cfg.attention == "swa" else max_len
+
+    def one(kind):
+        if kind == "attn":
+            shape = (batch, W, cfg.n_kv_heads, cfg.d_head)
+            return {"k": jnp.zeros(shape, jnp.bfloat16),
+                    "v": jnp.zeros(shape, jnp.bfloat16)}
+        return ssm_cache_init(cfg, batch)
+
+    def stack_cache(kind):
+        return jax.tree.map(
+            lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype), one(kind))
+
+    return {
+        "prefix": [one(k) for k, _ in prefix],
+        "stack": [stack_cache(k) for k, _ in period],
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_step(params: dict, token: jax.Array, pos: jax.Array,
+                cache: dict, cfg: ModelConfig, patches=None,
+                param_specs: dict | None = None):
+    """token: (B,1) int32; pos: () int32.  Returns (logits, new cache)."""
+    if cfg.modality == "audio":
+        raise ValueError("encoder-only model has no decode step")
+    sp = param_specs or {}
+    x = jnp.take(params["embed"], token, axis=0)
+    prefix, period, n_groups = layer_plan(cfg)
+
+    new_prefix = []
+    for i, (p, (kind, fk), c) in enumerate(zip(params["prefix"], prefix,
+                                               cache["prefix"])):
+        if sp:
+            p = gather_params(p, sp["prefix"][i])
+        x, nc = block_decode(p, x, pos, c, cfg, kind, fk)
+        new_prefix.append(nc)
+
+    def group_body(x, inp):
+        gp, gcache = inp
+        if sp:
+            gp = gather_params(gp, sp["stack"])
+        new_caches = []
+        for j, (kind, fk) in enumerate(period):
+            x, nc = block_decode(gp[j], x, pos, gcache[j], cfg, kind, fk)
+            new_caches.append(nc)
+        return x, new_caches
+
+    x, new_stack = lax.scan(group_body, x,
+                            (params["stack"], cache["stack"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"prefix": new_prefix, "stack": new_stack}

@@ -1,0 +1,2 @@
+from .sharding import (ShardingRules, make_rules, param_shardings,
+                       batch_shardings, cache_shardings, spec_for)

@@ -1,0 +1,131 @@
+"""Batched serving engine on top of ``prefill`` / ``decode_step``.
+
+Cohort (static) batching: requests are served in cohorts of ``n_slots``;
+within a cohort all prompts are left-padded to one length so every slot
+shares the decode position and the compiled decode step is reused across
+cohorts with zero recompiles (the production property that matters).
+Early-finishing slots are masked until the cohort drains — continuous
+batching would also need per-slot positions (scatter cache writes); the
+dry-run/roofline analysis is identical either way, so the simpler,
+exactly-correct scheme is used here.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+@dataclass
+class GenerationResult:
+    rid: int
+    tokens: list[int] = field(default_factory=list)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 max_len: int = 512, eos_id: int = 0, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len, self.eos_id = n_slots, max_len, eos_id
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, t, pos, c, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg))
+
+    # ------------------------------------------------------------ #
+    def _cohort_prefill(self, cohort: list[Request]):
+        plen = max(len(r.prompt) for r in cohort)
+        B = self.n_slots
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(cohort):
+            prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params,
+                                       {"tokens": jnp.asarray(prompts)})
+        dt = time.perf_counter() - t0
+        cache = init_cache(self.cfg, B, self.max_len)
+        cache = self._install(cache, caches, plen)
+        first = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        return cache, first, plen, dt
+
+    def _install(self, dst_tree, src_tree, plen: int):
+        """Copy prefill caches (seq len = plen or the SWA window) into
+        the engine's max_len buffers.  ``ax`` is the batch axis: 0 for
+        prefix-layer caches, 1 for group-stacked stack caches."""
+        def merge(ax):
+            def f(dst, src):
+                head = (slice(None),) * ax
+                if dst.ndim > ax + 1 and src.ndim > ax + 1 and \
+                        dst.shape[ax + 1] != src.shape[ax + 1]:
+                    w = min(src.shape[ax + 1], dst.shape[ax + 1])
+                    return dst.at[head + (slice(None), slice(0, w))].set(
+                        src[head + (slice(None), slice(-w, None))]
+                        .astype(dst.dtype))
+                return src.astype(dst.dtype) if dst.shape == src.shape \
+                    else dst
+            return f
+        return {
+            "prefix": [jax.tree.map(merge(0), d, s) for d, s in
+                       zip(dst_tree["prefix"], src_tree["prefix"])],
+            "stack": jax.tree.map(merge(1), dst_tree["stack"],
+                                  src_tree["stack"]),
+        }
+
+    # ------------------------------------------------------------ #
+    def run(self, requests: list[Request]) -> list[GenerationResult]:
+        done: list[GenerationResult] = []
+        queue = list(requests)
+        while queue:
+            cohort = queue[:self.n_slots]
+            queue = queue[self.n_slots:]
+            while len(cohort) < self.n_slots:     # pad with a dummy
+                cohort.append(Request(rid=-1, prompt=cohort[0].prompt,
+                                      max_new_tokens=1))
+            cache, first, plen, prefill_s = self._cohort_prefill(cohort)
+            results = [GenerationResult(r.rid, prefill_s=prefill_s)
+                       for r in cohort]
+            active = np.ones(self.n_slots, bool)
+            budget = np.array([r.max_new_tokens for r in cohort])
+            last = first.reshape(-1, 1).astype(np.int32)
+            for i, res in enumerate(results):
+                res.tokens.append(int(first[i]))
+                budget[i] -= 1
+                if first[i] == self.eos_id or budget[i] <= 0:
+                    active[i] = False
+            pos = plen
+            while active.any() and pos < self.max_len - 1:
+                t0 = time.perf_counter()
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(last), jnp.int32(pos),
+                    cache)
+                dt = time.perf_counter() - t0
+                toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                for i in range(self.n_slots):
+                    if not active[i]:
+                        continue
+                    results[i].decode_s += dt
+                    results[i].tokens.append(int(toks[i]))
+                    budget[i] -= 1
+                    last[i, 0] = toks[i]
+                    if toks[i] == self.eos_id or budget[i] <= 0:
+                        active[i] = False
+                pos += 1
+            done.extend(r for r in results if r.rid >= 0)
+        return done

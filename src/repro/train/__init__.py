@@ -1,0 +1,2 @@
+from .trainer import Trainer, TrainerConfig
+from .fault_tolerance import PreemptionSignal, StragglerMonitor

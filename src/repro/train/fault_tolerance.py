@@ -1,0 +1,92 @@
+"""Fault-tolerance building blocks for 1000+ node operation.
+
+* :class:`PreemptionSignal` — cooperative shutdown: SIGTERM/SIGINT (what
+  cloud schedulers send before eviction) flips a flag the train loop
+  checks each step; the loop then writes a final checkpoint and exits
+  cleanly.  A restart resumes from ``latest_step``.
+* :class:`StragglerMonitor` — per-step wall-time tracker with robust
+  (median + MAD) outlier detection.  On real multi-host deployments the
+  per-host step time is all-gathered over the DCN control plane; here the
+  detector consumes whatever samples it is fed (tests inject synthetic
+  stragglers).  Mitigation hook: the trainer records flagged steps and —
+  when a host exceeds ``evict_after`` consecutive flags — requests an
+  elastic restart without that host (mesh reshape via checkpoint
+  resharding, see repro.checkpoint).
+"""
+from __future__ import annotations
+
+import signal
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+class PreemptionSignal:
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._flag = False
+        self._previous = {}
+        self._signals = signals
+
+    def install(self) -> "PreemptionSignal":
+        for s in self._signals:
+            self._previous[s] = signal.signal(s, self._handler)
+        return self
+
+    def uninstall(self) -> None:
+        for s, prev in self._previous.items():
+            signal.signal(s, prev)
+        self._previous.clear()
+
+    def _handler(self, signum, frame):
+        self._flag = True
+
+    def trigger(self) -> None:          # for tests
+        self._flag = True
+
+    @property
+    def fired(self) -> bool:
+        return self._flag
+
+
+@dataclass
+class StragglerReport:
+    step: int
+    host: int
+    seconds: float
+    median: float
+    threshold: float
+
+
+@dataclass
+class StragglerMonitor:
+    window: int = 50
+    threshold_mads: float = 6.0
+    evict_after: int = 10
+    _samples: dict[int, list[float]] = field(default_factory=dict)
+    _consecutive: dict[int, int] = field(default_factory=dict)
+    reports: list[StragglerReport] = field(default_factory=list)
+
+    def record(self, step: int, host_times: dict[int, float]
+               ) -> list[StragglerReport]:
+        """Feed per-host step times; returns stragglers flagged now."""
+        flagged = []
+        times = list(host_times.values())
+        med = statistics.median(times)
+        mad = statistics.median(abs(t - med) for t in times) or 1e-9
+        threshold = med + self.threshold_mads * mad
+        for host, t in host_times.items():
+            hist = self._samples.setdefault(host, [])
+            hist.append(t)
+            del hist[:-self.window]
+            if len(times) > 1 and t > threshold and t > 1.2 * med:
+                self._consecutive[host] = self._consecutive.get(host, 0) + 1
+                rep = StragglerReport(step, host, t, med, threshold)
+                self.reports.append(rep)
+                flagged.append(rep)
+            else:
+                self._consecutive[host] = 0
+        return flagged
+
+    def hosts_to_evict(self) -> list[int]:
+        return [h for h, n in self._consecutive.items()
+                if n >= self.evict_after]

@@ -1,0 +1,55 @@
+"""Benchmark-harness correctness: every paper-table cell matches, and the
+roofline report parses the dry-run artifacts."""
+import os
+
+import pytest
+
+from benchmarks import paper_tables
+
+
+@pytest.mark.parametrize("table", ["table1", "table2", "table4",
+                                   "table5", "table6", "table7",
+                                   "fma_example"])
+def test_paper_table_matches(table):
+    rows = paper_tables.ALL_TABLES[table]()
+    assert rows
+    mismatches = [r["name"] for r in rows
+                  if "match" in r and not r["match"]
+                  or "match_paper" in r and not r["match_paper"]]
+    assert not mismatches, mismatches
+
+
+def test_table3_predictions_close_to_measurements():
+    rows = paper_tables.table3()
+    # O1/O2 rows: best-case bound within 5% of the paper's measurements
+    close = [r for r in rows if r["name"].endswith(("O1", "O2"))]
+    assert close
+    for r in close:
+        assert r["rel_err"] < 0.05, r
+
+
+def test_table5_combined_bound_improves_on_port_bound():
+    """Beyond-paper: max(TP bound, LCD) explains the -O1 outliers the
+    paper could only measure (Sec. III-B)."""
+    rows = {r["name"]: r for r in paper_tables.table5()}
+    for arch in ("skl", "zen"):
+        r = rows[f"table5/pi_{arch}_O1"]
+        port_err = abs(r["pred_tp_cy_it"] - r["paper_measured_cy_it"]) \
+            / r["paper_measured_cy_it"]
+        assert r["combined_rel_err"] < 0.05 < port_err
+
+
+@pytest.mark.skipif(
+    not os.path.exists("results/dryrun_baseline.json"),
+    reason="dry-run artifacts not present")
+def test_roofline_report_parses_dryrun():
+    from benchmarks.roofline import report
+    rows = report("results/dryrun_baseline.json", mesh="16x16")
+    ok = [r for r in rows if "skipped" not in r]
+    skipped = [r for r in rows if "skipped" in r]
+    assert len(ok) + len(skipped) == 40
+    assert len(skipped) == 8
+    for r in ok:
+        assert r["compute_s"] > 0 and r["bound_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 < r["roofline_fraction"] < 1

@@ -1,0 +1,152 @@
+"""Per-kernel shape/dtype sweeps + hypothesis property tests, asserting
+allclose against the pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.moe_gmm.ops import grouped_matmul
+from repro.kernels.moe_gmm.ref import grouped_matmul_reference
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_reference
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.key(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# flash attention
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("S,Hq,Hkv,D,causal,window,softcap", [
+    (128, 2, 2, 32, True, 0, 0.0),
+    (128, 4, 1, 64, True, 0, 0.0),      # MQA
+    (256, 4, 2, 64, False, 0, 0.0),     # bidirectional GQA
+    (256, 2, 2, 64, True, 64, 0.0),     # sliding window
+    (128, 2, 2, 32, True, 0, 30.0),     # logit softcap
+])
+def test_flash_attention_matches_reference(S, Hq, Hkv, D, causal, window,
+                                           softcap, dtype, tol):
+    B = 2
+    q = _rand(1, (B, S, Hq, D), dtype)
+    k = _rand(2, (B, S, Hkv, D), dtype)
+    v = _rand(3, (B, S, Hkv, D), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        softcap=softcap, block_q=64, block_k=64,
+                        interpret=True)
+    r = attention_reference(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        softcap=softcap).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(bq=st.sampled_from([32, 64, 128]),
+       bk=st.sampled_from([32, 64, 128]),
+       causal=st.booleans())
+def test_flash_attention_block_size_invariance(bq, bk, causal):
+    """Property: output independent of BlockSpec tiling."""
+    B, S, H, D = 1, 128, 2, 32
+    q = _rand(4, (B, S, H, D), jnp.float32)
+    k = _rand(5, (B, S, H, D), jnp.float32)
+    v = _rand(6, (B, S, H, D), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                         interpret=True)
+    o2 = flash_attention(q, k, v, causal=causal, block_q=S, block_k=S,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# SSD scan
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-5),
+                                       (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("S,H,P,N,chunk", [
+    (128, 2, 16, 16, 32),
+    (256, 4, 16, 32, 64),
+    (64, 1, 32, 16, 64),
+])
+def test_ssd_scan_matches_recurrence(S, H, P, N, chunk, dtype, tol):
+    B = 2
+    x = _rand(7, (B, S, H, P), dtype)
+    dt = jax.nn.softplus(_rand(8, (B, S, H), jnp.float32))
+    A = -jnp.exp(_rand(9, (H,), jnp.float32) * 0.5)
+    da = dt * A
+    bm = _rand(10, (B, S, N), dtype) * 0.3
+    cm = _rand(11, (B, S, N), dtype) * 0.3
+    y = ssd_scan(x, da, dt, bm.astype(jnp.float32),
+                 cm.astype(jnp.float32), chunk=chunk, interpret=True)
+    r = ssd_reference(
+        x.astype(jnp.float32).transpose(0, 2, 1, 3),
+        da.transpose(0, 2, 1), dt.transpose(0, 2, 1),
+        bm.astype(jnp.float32), cm.astype(jnp.float32)
+    ).transpose(0, 2, 1, 3)
+    scale = float(jnp.max(jnp.abs(r))) + 1e-6
+    np.testing.assert_allclose(np.asarray(y, np.float32) / scale,
+                               np.asarray(r, np.float32) / scale,
+                               atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.sampled_from([16, 32, 64, 128]))
+def test_ssd_scan_chunk_invariance(chunk):
+    """Property: chunked state passing is exact — chunk size must not
+    change the result (the paper's A2-style decomposition check)."""
+    B, S, H, P, N = 1, 128, 2, 16, 16
+    x = _rand(12, (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(13, (B, S, H), jnp.float32))
+    da = dt * -0.5
+    bm = _rand(14, (B, S, N), jnp.float32) * 0.3
+    cm = _rand(15, (B, S, N), jnp.float32) * 0.3
+    y1 = ssd_scan(x, da, dt, bm, cm, chunk=chunk, interpret=True)
+    y2 = ssd_scan(x, da, dt, bm, cm, chunk=S, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ #
+# grouped expert GEMM
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("E,C,d,f,bc,bd,bf", [
+    (4, 64, 128, 96, 32, 64, 32),
+    (2, 128, 64, 64, 128, 64, 64),
+    (8, 32, 256, 128, 32, 128, 128),
+])
+def test_grouped_matmul(E, C, d, f, bc, bd, bf, dtype, tol):
+    x = _rand(16, (E, C, d), dtype)
+    w = _rand(17, (E, d, f), dtype)
+    y = grouped_matmul(x, w, block_c=bc, block_d=bd, block_f=bf,
+                       interpret=True)
+    r = grouped_matmul_reference(x, w)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(r, np.float32),
+        atol=tol * d, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(e=st.integers(1, 6), seed=st.integers(0, 100))
+def test_grouped_matmul_expert_independence(e, seed):
+    """Property: expert e's output depends only on expert e's inputs."""
+    E, C, d, f = 6, 32, 64, 32
+    x = _rand(seed, (E, C, d), jnp.float32)
+    w = _rand(seed + 1, (E, d, f), jnp.float32)
+    y = grouped_matmul(x, w, block_c=32, block_d=64, block_f=32,
+                       interpret=True)
+    x2 = x.at[(e - 1) % E].set(0.0)
+    y2 = grouped_matmul(x2, w, block_c=32, block_d=64, block_f=32,
+                        interpret=True)
+    others = np.array([i for i in range(E) if i != (e - 1) % E])
+    np.testing.assert_allclose(np.asarray(y[others]),
+                               np.asarray(y2[others]), atol=1e-6)

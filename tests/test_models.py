@@ -1,0 +1,186 @@
+"""Model-stack correctness: chunked attention vs reference, SSD layer vs
+kernel oracle, prefill/decode consistency, MoE invariants, config smoke
+(one reduced train/forward step per assigned architecture)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (decode_step, encode, init_cache, init_params,
+                          model_schema, prefill, train_loss)
+from repro.models.attention import (chunked_attention,
+                                    reference_attention)
+from repro.models.config import SHAPES
+from repro.models.moe import moe_ffn
+from repro.models.transformer import layer_plan
+
+
+def _rand(seed, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32
+                             ).astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# chunked attention == reference
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 48)])
+def test_chunked_attention_matches_reference(causal, window):
+    B, S, Hq, Hkv, D = 2, 128, 4, 2, 32
+    q, k, v = (_rand(i, (B, S, Hq if i == 1 else Hkv, D))
+               for i in (1, 2, 3))
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          chunk_q=32, chunk_kv=32)
+    r = reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(cq=st.sampled_from([16, 32, 64, 128]),
+       ckv=st.sampled_from([16, 32, 64, 128]))
+def test_chunked_attention_chunk_invariance(cq, ckv):
+    B, S, H, D = 1, 128, 2, 32
+    q, k, v = (_rand(i + 10, (B, S, H, D)) for i in range(3))
+    o1 = chunked_attention(q, k, v, chunk_q=cq, chunk_kv=ckv)
+    o2 = reference_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_causal_skip_matches_masked_path():
+    B, S, H, D = 1, 128, 2, 32
+    q, k, v = (_rand(i + 20, (B, S, H, D)) for i in range(3))
+    o1 = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, chunk_q=32, chunk_kv=32, causal_skip=True))(q, k, v)
+    o2 = chunked_attention(q, k, v, chunk_q=32, chunk_kv=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# prefill + decode == full forward (the serving-correctness invariant)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-370m",
+                                  "jamba-1.5-large-398b",
+                                  "h2o-danube-3-4b"])
+def test_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    tol = 3e-2
+    if cfg.is_moe:
+        # capacity drops are train-time semantics; decode never drops —
+        # equality only holds with ample capacity.  Near-tie router
+        # logits can still flip expert choice between the two paths
+        # (bf16 summation-order differences), swapping whole expert
+        # outputs for a few tokens — intrinsic MoE behaviour, so the
+        # elementwise tolerance is wider for MoE archs.
+        cfg = cfg.with_updates(capacity_factor=8.0)
+        tol = 1.5e-1
+    params = init_params(model_schema(cfg), jax.random.key(0))
+    B, S = 2, 64
+    tokens = jax.random.randint(jax.random.key(1), (B, S + 1), 1,
+                                cfg.vocab_size)
+    # full forward logits at position S-1 predict token S
+    from repro.models.transformer import forward
+    full_x, _, _ = forward(params, {"tokens": tokens}, cfg)
+    full_logits = (full_x[:, S - 1:S + 1] @ params["lm_head"]
+                   ).astype(jnp.float32)
+
+    # prefill S tokens, then decode one step
+    logits_p, caches = prefill(params, {"tokens": tokens[:, :S]}, cfg)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(full_logits[:, 0]),
+                               atol=tol, rtol=tol)
+
+    cache = init_cache(cfg, B, S + 8)
+    # replay tokens 0..S-1 through decode to build the same cache state
+    logits_d = None
+    for t in range(S + 1):
+        logits_d, cache = decode_step(params, tokens[:, t:t + 1],
+                                      jnp.int32(t), cache, cfg)
+        if t == S - 1:
+            np.testing.assert_allclose(
+                np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, 0]),
+                atol=tol, rtol=1.0)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0]), np.asarray(full_logits[:, 1]),
+        atol=tol, rtol=1.0)
+
+
+# ------------------------------------------------------------------ #
+# MoE invariants
+# ------------------------------------------------------------------ #
+def test_moe_capacity_and_combination():
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    params = init_params(model_schema(cfg), jax.random.key(0))
+    _, period, _ = layer_plan(cfg)
+    moe_params = jax.tree.map(lambda x: x[0],
+                              params["stack"][0]["ffn"])
+    x = _rand(30, (64, cfg.d_model), jnp.bfloat16)
+    out, aux = moe_ffn(moe_params, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) > 0.9  # balanced-ish routing has aux ~ 1
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_moe_permutation_equivariance():
+    """Property: permuting tokens permutes outputs (routing is
+    tokenwise; capacity dropping is order-dependent only on overflow,
+    so use a tiny token count with generous capacity)."""
+    cfg = get_smoke_config("kimi-k2-1t-a32b").with_updates(
+        capacity_factor=8.0)
+    params = init_params(model_schema(cfg), jax.random.key(0))
+    moe_params = jax.tree.map(lambda x: x[0], params["stack"][0]["ffn"])
+    x = _rand(31, (32, cfg.d_model), jnp.bfloat16)
+    perm = np.random.RandomState(0).permutation(32)
+    out1, _ = moe_ffn(moe_params, x, cfg)
+    out2, _ = moe_ffn(moe_params, x[perm], cfg)
+    np.testing.assert_allclose(np.asarray(out1[perm], np.float32),
+                               np.asarray(out2, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+# ------------------------------------------------------------------ #
+# per-arch smoke: one reduced train (or encode) step, shapes + no NaNs
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(model_schema(cfg), jax.random.key(0))
+    B, S = 2, 128
+    if cfg.modality == "audio":
+        batch = {"frames": jnp.ones((B, S, 512), jnp.bfloat16),
+                 "labels": jnp.zeros((B, S), jnp.int32)}
+        logits = encode(params, batch, cfg)
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits).any())
+        return
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    if cfg.modality == "vision":
+        batch["patches"] = jnp.ones((B, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)
+    loss, grads = jax.value_and_grad(train_loss)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (dry-run) configs carry the exact assigned dimensions."""
+    spec = {
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 65536),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 163840),
+        "grok-1-314b": (64, 6144, 48, 8, 131072),
+        "qwen1.5-32b": (64, 5120, 40, 40, 152064),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 32000),
+        "nemotron-4-340b": (96, 18432, 96, 8, 256000),
+        "qwen2.5-3b": (36, 2048, 16, 2, 151936),
+        "hubert-xlarge": (48, 1280, 16, 16, 504),
+        "mamba2-370m": (48, 1024, 0, 0, 50280),
+        "llava-next-34b": (60, 7168, 56, 8, 64000),
+    }[arch]
+    cfg = get_config(arch)
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.vocab_size) == spec

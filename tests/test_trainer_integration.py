@@ -1,0 +1,99 @@
+"""End-to-end trainer: loss decreases, checkpoint/resume determinism,
+preemption handling, serving engine round trip."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.config import ShapeConfig
+from repro.optim import AdamWConfig
+from repro.serving import Request, ServingEngine
+from repro.train import Trainer, TrainerConfig
+
+
+def _mesh():
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _tiny_cfg():
+    return get_smoke_config("qwen2.5-3b").with_updates(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=1, d_head=32,
+        d_ff=128, attn_chunk_q=32, attn_chunk_kv=32, loss_chunk=32)
+
+
+_SHAPE = ShapeConfig("tiny", seq_len=64, global_batch=4, kind="train")
+
+
+def _tcfg(tmp_path, steps):
+    return TrainerConfig(steps=steps, checkpoint_dir=str(tmp_path),
+                         checkpoint_every=10, log_every=5,
+                         async_checkpoint=False,
+                         optimizer=AdamWConfig(lr=2e-3))
+
+
+def test_training_reduces_loss(tmp_path):
+    trainer = Trainer(_tiny_cfg(), _SHAPE, _mesh(), _tcfg(tmp_path, 30))
+    out = trainer.run()
+    losses = [m["loss"] for m in out["metrics"]]
+    assert out["final_step"] == 30
+    assert losses[-1] < losses[0] - 0.05, losses
+    assert not out["interrupted"]
+
+
+def test_resume_from_checkpoint_is_deterministic(tmp_path):
+    cfg, mesh = _tiny_cfg(), _mesh()
+    # run A: 20 steps straight through
+    a_dir = tmp_path / "a"
+    out_a = Trainer(cfg, _SHAPE, mesh, _tcfg(a_dir, 20)).run()
+    # run B: 10 steps, stop, new Trainer resumes to 20
+    b_dir = tmp_path / "b"
+    Trainer(cfg, _SHAPE, mesh, _tcfg(b_dir, 10)).run()
+    out_b = Trainer(cfg, _SHAPE, mesh, _tcfg(b_dir, 20)).run()
+    # stateless data pipeline + checkpointed state => identical history
+    la = {m["step"]: m["loss"] for m in out_a["metrics"]}
+    lb = {m["step"]: m["loss"] for m in out_b["metrics"]}
+    common = sorted(set(la) & set(lb) & {15, 19})
+    assert common
+    for s in common:
+        assert la[s] == pytest.approx(lb[s], rel=1e-4), (s, la[s], lb[s])
+
+
+def test_preemption_checkpoints_and_resumes(tmp_path):
+    cfg, mesh = _tiny_cfg(), _mesh()
+    trainer = Trainer(cfg, _SHAPE, mesh, _tcfg(tmp_path, 50))
+    # fire the preemption flag after a few steps via the monitor hook
+    orig_record = trainer.monitor.record
+
+    def record_and_preempt(step, times):
+        if step == 7:
+            trainer.preemption.trigger()
+        return orig_record(step, times)
+
+    trainer.monitor.record = record_and_preempt
+    out = trainer.run()
+    assert out["interrupted"] and out["final_step"] <= 8
+    assert trainer.store.latest_step() is not None
+    # resume finishes the job
+    out2 = Trainer(cfg, _SHAPE, mesh, _tcfg(tmp_path, 12)).run()
+    assert out2["final_step"] == 12 and not out2["interrupted"]
+
+
+def test_serving_engine_deterministic_roundtrip():
+    cfg = _tiny_cfg()
+    from repro.models import init_params, model_schema
+    params = init_params(model_schema(cfg), jax.random.key(0))
+    engine = ServingEngine(cfg, params, n_slots=2, max_len=64)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, prompt=rng.randint(1, cfg.vocab_size, 8),
+                    max_new_tokens=4) for i in range(3)]
+    r1 = engine.run(list(reqs))
+    engine2 = ServingEngine(cfg, params, n_slots=2, max_len=64)
+    r2 = engine2.run(list(reqs))
+    assert [r.tokens for r in sorted(r1, key=lambda r: r.rid)] == \
+           [r.tokens for r in sorted(r2, key=lambda r: r.rid)]
+    assert all(len(r.tokens) >= 1 for r in r1)
