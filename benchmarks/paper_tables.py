@@ -1,21 +1,22 @@
 """Reproductions of the paper's Tables I-VII: OSACA predictions from our
-engine vs the paper's published OSACA/IACA/measured numbers."""
+engine vs the paper's published OSACA/IACA/measured numbers.
+
+All cells are served by one shared :class:`AnalysisService`, so DB
+construction, form lookups and repeated kernel analyses are memoized
+across the whole table sweep."""
 from __future__ import annotations
 
-from repro.core import analyze, analyze_latency, extract_kernel
-from repro.core.arch.skylake import (STORE_FORWARD_LATENCY as SKL_SLF,
-                                     build_skylake_db)
-from repro.core.arch.zen import (STORE_FORWARD_LATENCY as ZEN_SLF,
-                                 build_zen_db)
+from repro.core import AnalysisRequest, default_service
 from repro.core import paper_kernels as pk
 
-SKL = build_skylake_db()
-ZEN = build_zen_db()
+SERVICE = default_service()
+SKL = SERVICE.database("skl")
+ZEN = SERVICE.database("zen")
 
 
-def _pred(db, src, unroll):
-    res = analyze(extract_kernel(src), db, unroll_factor=unroll)
-    return res
+def _pred(arch, src, unroll):
+    return SERVICE.predict(AnalysisRequest(
+        kernel=src, arch=arch, unroll_factor=unroll))
 
 
 def table1() -> list[dict]:
@@ -24,8 +25,9 @@ def table1() -> list[dict]:
     for (compiled, flag), (unroll, exp_zen, exp_skl, iaca) in \
             pk.TABLE1.items():
         src = pk.TRIAD_KERNELS[(compiled, flag)]
-        zen = _pred(ZEN, src, unroll).predicted_cycles
-        skl = _pred(SKL, src, unroll).predicted_cycles
+        # paper's OSACA numbers are the pure throughput (port) bound
+        zen = _pred("zen", src, unroll).port_bound_cycles
+        skl = _pred("skl", src, unroll).port_bound_cycles
         rows.append({
             "name": f"table1/triad_{compiled}_{flag}",
             "pred_zen_cy": zen, "paper_zen_cy": exp_zen,
@@ -38,7 +40,7 @@ def table1() -> list[dict]:
 
 
 def table2() -> list[dict]:
-    res = _pred(SKL, pk.TRIAD_SKL_O3, 4)
+    res = _pred("skl", pk.TRIAD_SKL_O3, 4)
     rows = []
     for port, exp in pk.TABLE2_TOTALS.items():
         rows.append({"name": f"table2/port_{port}",
@@ -52,8 +54,7 @@ def table3() -> list[dict]:
     rows = []
     for (run_on, compiled, flag), measured in pk.TABLE3_MEASURED.items():
         unroll = pk.TABLE1[(compiled, flag)][0]
-        db = SKL if run_on == "skl" else ZEN
-        pred = _pred(db, pk.TRIAD_KERNELS[(compiled, flag)],
+        pred = _pred(run_on, pk.TRIAD_KERNELS[(compiled, flag)],
                      unroll).cycles_per_source_iteration
         rows.append({
             "name": f"table3/triad_on_{run_on}_for_{compiled}_{flag}",
@@ -64,7 +65,7 @@ def table3() -> list[dict]:
 
 
 def table4() -> list[dict]:
-    res = _pred(ZEN, pk.TRIAD_ZEN_O3, 2)
+    res = _pred("zen", pk.TRIAD_ZEN_O3, 2)
     rows = []
     for port, exp in pk.TABLE4_TOTALS.items():
         rows.append({"name": f"table4/port_{port}",
@@ -78,40 +79,36 @@ def table4() -> list[dict]:
 
 
 def table5() -> list[dict]:
-    """pi benchmark: port-bound prediction + beyond-paper LCD bound."""
+    """pi benchmark: the unified engine's port bound, LCD bound and the
+    combined ``max`` prediction in one pass per cell."""
     rows = []
     for (arch, flag), (unroll, iaca, exp, measured) in pk.TABLE5.items():
-        db = SKL if arch == "skl" else ZEN
-        slf = SKL_SLF if arch == "skl" else ZEN_SLF
-        src = pk.PI_KERNELS[(arch, flag)]
-        kern = extract_kernel(src)
-        res = analyze(kern, db, unroll_factor=unroll)
-        lcd = analyze_latency(kern, db, store_forward_latency=slf)
-        combined = max(res.cycles_per_source_iteration,
-                       lcd.loop_carried_cycles / unroll)
+        res = _pred(arch, pk.PI_KERNELS[(arch, flag)], unroll)
+        combined = res.cycles_per_source_iteration
         rows.append({
             "name": f"table5/pi_{arch}_{flag}",
-            "pred_tp_cy_it": res.cycles_per_source_iteration,
+            "pred_tp_cy_it": res.port_bound_per_source_iteration,
             "paper_osaca_cy_it": exp, "iaca_cy_it": iaca,
             "paper_measured_cy_it": measured,
-            "lcd_cy_it": lcd.loop_carried_cycles / unroll,
+            "lcd_cy_it": res.lcd_per_source_iteration,
             "combined_pred_cy_it": combined,
+            "binding": res.binding,
             "combined_rel_err": abs(combined - measured) / measured,
-            "match_paper": abs(res.cycles_per_source_iteration - exp)
+            "match_paper": abs(res.port_bound_per_source_iteration - exp)
             < 0.01,
         })
     return rows
 
 
 def table6() -> list[dict]:
-    res = _pred(SKL, pk.PI_SKL_O3, 8)
+    res = _pred("skl", pk.PI_SKL_O3, 8)
     return [{"name": f"table6/port_{p}", "pred": res.port_totals[p],
              "paper": e, "match": abs(res.port_totals[p] - e) < 0.01}
             for p, e in pk.TABLE6_TOTALS.items()]
 
 
 def table7() -> list[dict]:
-    res = _pred(SKL, pk.PI_O2, 1)
+    res = _pred("skl", pk.PI_O2, 1)
     return [{"name": f"table7/port_{p}", "pred": res.port_totals[p],
              "paper": e, "match": abs(res.port_totals[p] - e) < 0.01}
             for p, e in pk.TABLE7_TOTALS.items()]

@@ -16,7 +16,7 @@ import argparse
 
 def main():
     from repro.configs import ARCH_IDS
-    from repro.core.hlo.analyzer import analyze_hlo
+    from repro.core.engine import default_service
     from repro.launch.dryrun import _coerce
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_step
@@ -44,7 +44,9 @@ def main():
               f"{mesh.devices.size} chips ...")
         compiled = step.lower().compile()
         print("memory_analysis:", compiled.memory_analysis())
-        analysis = analyze_hlo(compiled.as_text())
+        # shared service: repeated runs over the same module (or the
+        # serving dry-run on the same program) reuse this analysis
+        analysis = default_service().predict_hlo(compiled.as_text())
     print(analysis.render(top=args.top))
 
 

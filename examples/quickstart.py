@@ -11,29 +11,36 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import analyze, extract_kernel
-from repro.core.arch.skylake import build_skylake_db
-from repro.core.arch.zen import build_zen_db
-from repro.core.hlo.analyzer import analyze_hlo
+from repro.core import AnalysisRequest, default_service
 from repro.core import paper_kernels as pk
 from repro.configs import get_smoke_config
 from repro.models import init_params, model_schema, train_loss
 
 
 def main():
+    svc = default_service()
+
     # -- 1. the paper's x86 analysis -----------------------------------
     print("=" * 72)
     print("OSACA analysis: Schoenauer triad, -O3, Skylake (paper Table II)")
     print("=" * 72)
-    res = analyze(extract_kernel(pk.TRIAD_SKL_O3), build_skylake_db(),
-                  unroll_factor=4)
+    res = svc.predict(AnalysisRequest(kernel=pk.TRIAD_SKL_O3, arch="skl",
+                                      unroll_factor=4))
     print(res.render())
     print()
     print("Same code on the AMD Zen model (paper Table I row 3):")
-    res_zen = analyze(extract_kernel(pk.TRIAD_SKL_O3), build_zen_db(),
-                      unroll_factor=4)
+    res_zen = svc.predict(AnalysisRequest(kernel=pk.TRIAD_SKL_O3,
+                                          arch="zen", unroll_factor=4))
     print(f"  predicted {res_zen.predicted_cycles:.2f} cy/asm-it "
           f"(paper: 4.00) — AVX double-pumping on Zen")
+    print()
+    print("pi at -O1: the case the paper's pure port model gets ~2x wrong")
+    print("(Table V) — the unified engine's LCD bound fixes it:")
+    res_pi = svc.predict(AnalysisRequest(kernel=pk.PI_O1, arch="skl"))
+    print(f"  port bound {res_pi.port_bound_cycles:.2f} cy/it, "
+          f"LCD {res_pi.lcd_cycles:.2f} cy/it -> predicted "
+          f"{res_pi.predicted_cycles:.2f} ({res_pi.binding}-bound; "
+          f"measured 9.02)")
 
     # -- 2. train a reduced model --------------------------------------
     print()
@@ -68,7 +75,7 @@ def main():
     lowered = jax.jit(lambda p, o, t, l: step.__wrapped__(p, o, t, l)) \
         .lower(params, opt, tokens, labels)
     text = lowered.compile().as_text()
-    analysis = analyze_hlo(text)
+    analysis = svc.predict_hlo(text)
     print(analysis.render(top=8))
 
 

@@ -5,13 +5,15 @@ from __future__ import annotations
 
 from .analysis import AnalysisResult, analyze
 from .database import E, InstrForm, InstructionDB, widen_double_pumped
+from .engine import AnalysisRequest, AnalysisService, default_service
 from .isa import Instruction, parse_assembly
 from .kernel import extract_kernel
-from .latency import analyze_latency
+from .latency import LatencyResult, analyze_latency
 from .ports import PortModel, U, Uop
 
 __all__ = [
-    "AnalysisResult", "analyze", "analyze_latency", "extract_kernel",
+    "AnalysisRequest", "AnalysisResult", "AnalysisService", "analyze",
+    "analyze_latency", "default_service", "extract_kernel",
     "parse_assembly", "Instruction", "InstructionDB", "InstrForm", "E",
-    "PortModel", "U", "Uop", "widen_double_pumped",
+    "LatencyResult", "PortModel", "U", "Uop", "widen_double_pumped",
 ]

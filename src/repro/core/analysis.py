@@ -1,6 +1,13 @@
-"""Throughput analysis (paper Sec. III): map every kernel instruction to its
-DB entry, schedule uops onto ports, sum per-port occupation, report the
-bottleneck port and the predicted cycles per (assembly) loop iteration.
+"""Unified throughput (+) critical-path analysis (paper Sec. III, and the
+OSACA follow-up arXiv:1910.00214): map every kernel instruction to its DB
+entry, schedule uops onto ports, sum per-port occupation, and combine the
+port-occupation bound with the loop-carried-dependency (LCD) bound —
+
+    predicted = max(port_bound, loop_carried_dependency)
+
+The paper's own worst mispredictions (pi at -O1, Table V: measurement ~2x
+the port-bound estimate) are exactly the cases where the LCD term binds.
+Both bounds and the binding constraint are reported by ``render()``.
 
 Implements the Zen store/load AGU pairing: each store instruction hides one
 load instruction's AGU uops (displayed parenthesised, excluded from totals) —
@@ -9,9 +16,11 @@ paper Sec. III-A, Table IV.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Callable
 
 from .database import InstructionDB, MissingForm
 from .isa import Instruction
+from .latency import LatencyResult, analyze_latency
 from .ports import PortModel, merge_occupation
 from .scheduler import SCHEDULERS, ScheduledUop
 
@@ -31,18 +40,42 @@ class InstructionReport:
 
 @dataclass
 class AnalysisResult:
+    """Combined throughput + critical-path prediction for one kernel.
+
+    The headline number, ``predicted_cycles``, is the *combined* bound
+    ``max(port_bound_cycles, lcd_cycles)`` per assembly iteration; the two
+    constituent bounds are always reported alongside so callers (and
+    ``render()``) can see which constraint binds.
+    """
+
     model: PortModel
     rows: list[InstructionReport]
-    port_totals: dict[str, float]
-    bottleneck_port: str
-    predicted_cycles: float               # per assembly iteration
+    port_totals: dict[str, float]         # visible occupation per port
+    bottleneck_port: str                  # argmax of port_totals
+    predicted_cycles: float               # combined bound, per asm iteration
     missing: list[MissingForm]
     scheduler: str
     unroll_factor: int = 1
+    # --- constituent bounds (per assembly iteration) -------------------
+    port_bound_cycles: float = 0.0        # pure throughput (paper) bound
+    lcd_cycles: float = 0.0               # loop-carried dependency bound
+    latency_result: LatencyResult | None = None
+    binding: str = "throughput"           # "throughput" | "latency"
 
     @property
     def cycles_per_source_iteration(self) -> float:
+        """Combined bound scaled back to one *source* loop iteration."""
         return self.predicted_cycles / self.unroll_factor
+
+    @property
+    def port_bound_per_source_iteration(self) -> float:
+        """The paper's pure port-occupation bound per source iteration."""
+        return self.port_bound_cycles / self.unroll_factor
+
+    @property
+    def lcd_per_source_iteration(self) -> float:
+        """The loop-carried-dependency bound per source iteration."""
+        return self.lcd_cycles / self.unroll_factor
 
     # ------------------------------------------------------------------
     def render(self, precision: int = 2) -> str:
@@ -73,13 +106,25 @@ class AnalysisResult:
                   for p in self.model.ports]
         lines.append("|" + "-" * (len(lines[0]) - 1))
         lines.append("| " + " | ".join(totals) + " |")
+        unit = self.model.unit
         lines.append(
-            f"Bottleneck port: {self.bottleneck_port}   predicted "
-            f"{self.predicted_cycles:.{precision}f} {self.model.unit}/asm-it"
+            f"Port (throughput) bound: {self.port_bound_cycles:.{precision}f}"
+            f" {unit}/asm-it   (bottleneck port {self.bottleneck_port})")
+        if self.latency_result is not None:
+            lines.append(
+                f"Loop-carried dependency: {self.lcd_cycles:.{precision}f} "
+                f"{unit}/asm-it"
+                + ("" if not self.latency_result.chain else
+                   "   (critical chain: "
+                   + " -> ".join(i.mnemonic
+                                 for i in self.latency_result.chain) + ")"))
+        lines.append(
+            f"Predicted: {self.predicted_cycles:.{precision}f} {unit}/asm-it"
+            f" = max(port, LCD)"
             + (f"   ({self.cycles_per_source_iteration:.{precision}f} "
-               f"{self.model.unit}/src-it @ unroll "
+               f"{unit}/src-it @ unroll "
                f"{self.unroll_factor})" if self.unroll_factor != 1 else "")
-            + f"   [scheduler={self.scheduler}]")
+            + f"   [{self.binding}-bound, scheduler={self.scheduler}]")
         if self.missing:
             lines.append("Missing forms (benchmarks auto-generated):")
             for m in self.missing:
@@ -89,15 +134,42 @@ class AnalysisResult:
 
 def analyze(kernel: list[Instruction], db: InstructionDB,
             scheduler: str = "uniform",
-            unroll_factor: int = 1) -> AnalysisResult:
+            unroll_factor: int = 1, *,
+            latency_bound: bool = True,
+            store_forward_latency: float | None = None,
+            schedule_fn: Callable | None = None,
+            lookup: Callable | None = None) -> AnalysisResult:
+    """Predict kernel runtime as ``max(port_bound, loop-carried dep)``.
+
+    Args:
+        kernel: instructions of one assembly loop iteration (see
+            :func:`repro.core.kernel.extract_kernel`).
+        db: per-architecture instruction-form database.
+        scheduler: ``"uniform"`` (paper assumption 2) or ``"balanced"``
+            (IACA-like min-max LP).
+        unroll_factor: assembly-iterations per source iteration; only
+            affects the ``*_per_source_iteration`` properties.
+        latency_bound: when True (default) also run the critical-path /
+            LCD analysis and fold it into ``predicted_cycles``; when
+            False, reproduce the paper's pure throughput model.
+        store_forward_latency: override for the architecture's
+            store->load forwarding latency (defaults to the PortModel's).
+        schedule_fn: override for ``SCHEDULERS[scheduler]`` — the batched
+            :class:`repro.core.engine.AnalysisService` injects a
+            memoizing wrapper around the balanced-scheduler LP here.
+        lookup: override for ``db.lookup`` (memoized by the service).
+    """
     model = db.model
-    schedule_fn = SCHEDULERS[scheduler]
+    if schedule_fn is None:
+        schedule_fn = SCHEDULERS[scheduler]
+    if lookup is None:
+        lookup = db.lookup
 
     # 1. match instruction forms
     matched: list[tuple[Instruction, object]] = []
     missing: list[MissingForm] = []
     for ins in kernel:
-        entry = db.lookup(ins)
+        entry = lookup(ins)
         if entry is None and not _is_ignorable(ins):
             missing.append(MissingForm(ins))
         matched.append((ins, entry))
@@ -154,11 +226,27 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
             matched=e is not None))
 
     bottleneck = max(port_totals, key=lambda p: port_totals[p])
+    port_bound = port_totals[bottleneck]
+
+    # 5. critical-path / loop-carried-dependency bound (arXiv:1910.00214):
+    #    the headline prediction is max(throughput bound, LCD).
+    lat_res: LatencyResult | None = None
+    lcd = 0.0
+    if latency_bound:
+        lat_res = analyze_latency(
+            kernel, db, store_forward_latency=store_forward_latency,
+            lookup=lookup)
+        lcd = lat_res.loop_carried_cycles
+    combined = max(port_bound, lcd)
+    binding = "latency" if lcd > port_bound + 1e-9 else "throughput"
+
     return AnalysisResult(
         model=model, rows=rows, port_totals=port_totals,
         bottleneck_port=bottleneck,
-        predicted_cycles=port_totals[bottleneck],
-        missing=missing, scheduler=scheduler, unroll_factor=unroll_factor)
+        predicted_cycles=combined,
+        missing=missing, scheduler=scheduler, unroll_factor=unroll_factor,
+        port_bound_cycles=port_bound, lcd_cycles=lcd,
+        latency_result=lat_res, binding=binding)
 
 
 def _is_ignorable(ins: Instruction) -> bool:

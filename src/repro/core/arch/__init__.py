@@ -5,11 +5,24 @@ from .skylake import build_skylake_db, SKYLAKE
 from .zen import build_zen_db, ZEN
 
 
+# alias -> canonical id; shared by get_db and the AnalysisService caches
+_ALIASES = {"skl": "skl", "skylake": "skl",
+            "zen": "zen", "zen1": "zen", "znver1": "zen"}
+
+
+def canonical_arch(arch: str) -> str:
+    """Canonical architecture id: aliases collapse ("skylake" -> "skl",
+    "znver1" -> "zen"); unknown names pass through lowercased (they may
+    be custom AnalysisService registrations)."""
+    a = arch.lower()
+    return _ALIASES.get(a, a)
+
+
 def get_db(arch: str):
-    arch = arch.lower()
-    if arch in ("skl", "skylake"):
+    arch = canonical_arch(arch)
+    if arch == "skl":
         return build_skylake_db()
-    if arch in ("zen", "zen1", "znver1"):
+    if arch == "zen":
         return build_zen_db()
     raise ValueError(f"unknown architecture {arch!r} "
                      "(TPU analysis lives in repro.core.hlo.analyzer)")

@@ -1,0 +1,326 @@
+"""Batched multi-architecture analysis service (the unified prediction
+engine).
+
+One :class:`AnalysisService` owns every per-architecture instruction
+database and serves *batches* of kernels x architectures x schedulers
+through a single memoized pipeline:
+
+* **DB construction** — each architecture's database is built once and
+  shared across the batch.
+* **Form lookups** — ``db.lookup`` results are cached per
+  ``(arch, mnemonic, signature)``; a sweep re-resolving the same triad
+  kernel on three schedulers pays for the progressive-generalisation
+  walk only once.
+* **Balanced-scheduler LP solves** — ``schedule_balanced`` is an exact
+  min-max flow LP; its result depends only on the (ordered) uop spec, so
+  identical kernels across the batch reuse the solve.
+* **Whole results** — ``predict()`` itself is memoized on
+  ``(arch, kernel, scheduler, unroll, latency_bound)``; ``render()``
+  variations, table generators and tests all hit the same entry.
+* **HLO analyses** — ``predict_hlo`` caches by module-text digest, so the
+  serving dry-run and the roofline benchmark share one pass per program.
+
+Entry points: :meth:`AnalysisService.predict` (one request),
+:meth:`~AnalysisService.predict_batch` (many, optionally threaded),
+:meth:`~AnalysisService.predict_async` (awaitable), and
+:meth:`~AnalysisService.sweep` (full kernels x archs x schedulers grid).
+
+Every prediction is the *combined* bound ``max(port_bound, LCD)`` from
+:func:`repro.core.analysis.analyze` — see docs/prediction-model.md.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Iterable, Mapping, Sequence
+
+from .analysis import AnalysisResult, analyze
+from .arch import canonical_arch
+from .database import InstructionDB
+from .isa import Instruction
+from .kernel import extract_kernel
+from .ports import PortModel, Uop
+from .scheduler import SCHEDULERS, ScheduledUop
+
+
+@dataclass(frozen=True)
+class AnalysisRequest:
+    """One cell of a batch: a kernel analyzed on one architecture.
+
+    Attributes:
+        kernel: assembly source text (markers/loop detection handled by
+            :func:`repro.core.kernel.extract_kernel`) or an already-parsed
+            tuple of :class:`~repro.core.isa.Instruction`.
+        arch: architecture id understood by ``repro.core.arch.get_db``
+            (``"skl"``/``"skylake"``, ``"zen"``/``"zen1"``/``"znver1"``)
+            or a name registered via :meth:`AnalysisService.register_db`.
+        scheduler: ``"uniform"`` or ``"balanced"``.
+        unroll_factor: assembly iterations per source iteration.
+        latency_bound: fold the LCD bound into the prediction (default).
+        syntax: ``"att"`` or ``"intel"`` when ``kernel`` is text.
+    """
+
+    kernel: str | tuple[Instruction, ...]
+    arch: str = "skl"
+    scheduler: str = "uniform"
+    unroll_factor: int = 1
+    latency_bound: bool = True
+    syntax: str = "att"
+
+
+@dataclass
+class ServiceStats:
+    """Cache-effectiveness counters for one :class:`AnalysisService`."""
+
+    result_hits: int = 0
+    result_misses: int = 0
+    lookup_hits: int = 0
+    lookup_misses: int = 0
+    lp_hits: int = 0
+    lp_misses: int = 0
+    hlo_hits: int = 0
+    hlo_misses: int = 0
+
+    def as_dict(self) -> dict[str, int]:
+        return dict(vars(self))
+
+
+class AnalysisService:
+    """Memoizing, thread-safe front end over the prediction pipeline.
+
+    A single instance can be shared by benchmarks, examples, the HLO
+    analyzer and the serving engine; all of them then draw from the same
+    database/lookup/LP/result caches.  All public methods are safe to
+    call from multiple threads (``predict_batch(parallel=True)`` does).
+    """
+
+    def __init__(self, max_workers: int = 8):
+        self._lock = threading.RLock()
+        self._dbs: dict[str, InstructionDB] = {}
+        self._lookups: dict[str, Callable[[Instruction], object]] = {}
+        self._lp_cache: dict[tuple, list[ScheduledUop]] = {}
+        self._results: dict[tuple, AnalysisResult] = {}
+        self._hlo_cache: dict[tuple, object] = {}
+        self._max_workers = max_workers
+        self.stats = ServiceStats()
+
+    # ------------------------------------------------------------------
+    # databases
+    # ------------------------------------------------------------------
+    def register_db(self, name: str, db: InstructionDB) -> None:
+        """Register a custom architecture database under ``name``.
+
+        Re-registering a name drops every cached lookup and result for
+        it, so subsequent predictions use the new database."""
+        key = canonical_arch(name)
+        with self._lock:
+            self._dbs[key] = db
+            self._lookups.pop(key, None)
+            for k in [k for k in self._results if k[0] == key]:
+                del self._results[k]
+
+    def database(self, arch: str) -> InstructionDB:
+        """The (cached) instruction DB for ``arch``, built on first use."""
+        key = canonical_arch(arch)
+        with self._lock:
+            db = self._dbs.get(key)
+            if db is None:
+                from .arch import get_db
+                db = get_db(key)
+                self._dbs[key] = db
+            return db
+
+    def _lookup_fn(self, arch: str) -> Callable[[Instruction], object]:
+        """Memoized ``db.lookup`` keyed by (mnemonic, signature)."""
+        key = canonical_arch(arch)
+        with self._lock:
+            fn = self._lookups.get(key)
+            if fn is not None:
+                return fn
+            db = self.database(key)
+            cache: dict[tuple, object] = {}
+
+            def lookup(ins: Instruction):
+                k = (ins.mnemonic, ins.signature)
+                with self._lock:
+                    if k in cache:
+                        self.stats.lookup_hits += 1
+                        return cache[k]
+                    self.stats.lookup_misses += 1
+                entry = db.lookup(ins)
+                with self._lock:
+                    cache[k] = entry
+                return entry
+
+            self._lookups[key] = lookup
+            return lookup
+
+    # ------------------------------------------------------------------
+    # balanced-scheduler LP memoization
+    # ------------------------------------------------------------------
+    def _schedule_fn(self, model: PortModel, scheduler: str) -> Callable:
+        base = SCHEDULERS[scheduler]
+        if scheduler != "balanced":
+            return base  # uniform is O(n); caching would only add overhead
+
+        def cached(model_: PortModel,
+                   uops: list[tuple[int, Uop]]) -> list[ScheduledUop]:
+            # the LP solution is a deterministic function of the port
+            # list + uop spec, so keying on both stays correct even when
+            # two registered databases share a model name
+            key = (model_.ports,
+                   tuple((idx, u.ports, u.cycles) for idx, u in uops))
+            with self._lock:
+                hit = self._lp_cache.get(key)
+                if hit is not None:
+                    self.stats.lp_hits += 1
+                    return hit
+                self.stats.lp_misses += 1
+            out = base(model_, uops)
+            with self._lock:
+                self._lp_cache[key] = out
+            return out
+
+        return cached
+
+    # ------------------------------------------------------------------
+    # prediction entry points
+    # ------------------------------------------------------------------
+    def _kernel_of(self, req: AnalysisRequest) -> tuple[Instruction, ...]:
+        if isinstance(req.kernel, str):
+            return tuple(extract_kernel(req.kernel, syntax=req.syntax))
+        return tuple(req.kernel)
+
+    def predict(self, request: AnalysisRequest) -> AnalysisResult:
+        """Run the combined ``max(port_bound, LCD)`` pipeline for one
+        request, drawing every sub-step from the service caches."""
+        if isinstance(request.kernel, str):
+            # raw source keys by (text, syntax): the same bytes parse
+            # differently under AT&T vs Intel, and keying pre-parse also
+            # skips extract_kernel entirely on a hit
+            kid = ("src", request.kernel, request.syntax)
+        else:
+            # Instruction is a frozen dataclass: hashing the instances
+            # themselves keys on the full parse (operand order included),
+            # not just the source text, so e.g. the same reg-reg move
+            # parsed under AT&T vs Intel order cannot collide
+            kid = ("parsed", tuple(request.kernel))
+        key = (canonical_arch(request.arch), kid,
+               request.scheduler, request.unroll_factor,
+               request.latency_bound)
+        with self._lock:
+            hit = self._results.get(key)
+            if hit is not None:
+                self.stats.result_hits += 1
+                return hit
+            self.stats.result_misses += 1
+        kernel = self._kernel_of(request)
+        db = self.database(request.arch)
+        res = analyze(
+            list(kernel), db, scheduler=request.scheduler,
+            unroll_factor=request.unroll_factor,
+            latency_bound=request.latency_bound,
+            schedule_fn=self._schedule_fn(db.model, request.scheduler),
+            lookup=self._lookup_fn(request.arch))
+        with self._lock:
+            self._results[key] = res
+        return res
+
+    def predict_batch(self, requests: Sequence[AnalysisRequest],
+                      parallel: bool = False) -> list[AnalysisResult]:
+        """Predict every request; order of results matches the input.
+
+        With ``parallel=True`` requests run on a thread pool — the LP
+        solves and parsing release little of the GIL, so this mainly
+        helps when requests interleave with I/O-bound callers.  Note
+        there is no in-flight deduplication: identical cells submitted
+        concurrently on a cold cache may each compute (correctly);
+        the cache deduplicates sequential calls and later batches.
+        """
+        if not parallel or len(requests) <= 1:
+            return [self.predict(r) for r in requests]
+        with ThreadPoolExecutor(max_workers=self._max_workers) as ex:
+            return list(ex.map(self.predict, requests))
+
+    async def predict_async(self,
+                            request: AnalysisRequest) -> AnalysisResult:
+        """Awaitable ``predict`` (runs on the default executor)."""
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(None, self.predict, request)
+
+    def sweep(self, kernels: Mapping[str, str | tuple[Instruction, ...]],
+              archs: Iterable[str] = ("skl", "zen"),
+              schedulers: Iterable[str] = ("uniform",),
+              unroll_factors: Mapping[str, int] | None = None,
+              parallel: bool = False,
+              ) -> dict[tuple[str, str, str], AnalysisResult]:
+        """Full grid: ``{(kernel_name, arch, scheduler): AnalysisResult}``.
+
+        ``unroll_factors`` optionally maps kernel names to their unroll
+        factor (default 1).  This is the bulk entry point used by
+        ``benchmarks/paper_tables.py``-style sweeps.
+        """
+        unroll_factors = unroll_factors or {}
+        names, reqs = [], []
+        for name, kern in kernels.items():
+            for arch in archs:
+                for sched in schedulers:
+                    names.append((name, arch, sched))
+                    reqs.append(AnalysisRequest(
+                        kernel=kern, arch=arch, scheduler=sched,
+                        unroll_factor=unroll_factors.get(name, 1)))
+        results = self.predict_batch(reqs, parallel=parallel)
+        return dict(zip(names, results))
+
+    # ------------------------------------------------------------------
+    # HLO (TPU) path
+    # ------------------------------------------------------------------
+    def predict_hlo(self, text: str, *, ici_links: float = 1.0,
+                    flop_dtype: str = "bf16"):
+        """Memoized :func:`repro.core.hlo.analyzer.analyze_hlo`.
+
+        Results carry the combined ``max(overlap, critical-path)`` bound
+        (``HloAnalysis.terms.bound_combined``); the cache key is the
+        module-text digest, so the serving dry-run and roofline sweeps
+        share one pass per compiled program.
+        """
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        key = (digest, ici_links, flop_dtype)
+        with self._lock:
+            hit = self._hlo_cache.get(key)
+            if hit is not None:
+                self.stats.hlo_hits += 1
+                return hit
+            self.stats.hlo_misses += 1
+        from .hlo.analyzer import analyze_hlo
+        res = analyze_hlo(text, ici_links=ici_links, flop_dtype=flop_dtype)
+        with self._lock:
+            self._hlo_cache[key] = res
+        return res
+
+    # ------------------------------------------------------------------
+    def cache_clear(self) -> None:
+        """Drop every cache (databases are kept) and reset the stats."""
+        with self._lock:
+            self._lookups.clear()
+            self._lp_cache.clear()
+            self._results.clear()
+            self._hlo_cache.clear()
+            self.stats = ServiceStats()
+
+
+_DEFAULT: AnalysisService | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_service() -> AnalysisService:
+    """Process-wide shared service (benchmarks, examples and the serving
+    dry-run all use this one so their caches compose)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = AnalysisService()
+        return _DEFAULT

@@ -75,11 +75,22 @@ class Cost:
 
 @dataclass
 class RooflineTerms:
+    """Roofline/ECM-style time bounds for one compiled step.
+
+    ``bound_overlap`` is the paper's max-over-ports throughput bound under
+    perfect overlap; ``critical_path_s`` is the dependency-chain analogue
+    of the x86 loop-carried-dependency bound (ops on the entry
+    computation's longest cost-weighted dependency chain cannot overlap
+    with each other); ``bound_combined = max`` of the two is the headline
+    estimate, mirroring ``max(port_bound, LCD)`` on the CPU side.
+    """
+
     compute_s: float
     memory_s: float
     collective_s: float
     mxu_s: float = 0.0
     vpu_s: float = 0.0
+    critical_path_s: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -94,6 +105,18 @@ class RooflineTerms:
     @property
     def bound_serial(self) -> float:
         return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def bound_combined(self) -> float:
+        """max(throughput bound, critical path) — the tighter estimate."""
+        return max(self.bound_overlap, self.critical_path_s)
+
+    @property
+    def binding(self) -> str:
+        """Which constraint produces ``bound_combined``."""
+        return ("critical-path"
+                if self.critical_path_s > self.bound_overlap + 1e-15
+                else "throughput")
 
 
 @dataclass
@@ -122,6 +145,10 @@ class HloAnalysis:
             f"  bound   {self.terms.bound_overlap * 1e3:12.3f} ms "
             f"(perfect overlap) / {self.terms.bound_serial * 1e3:.3f} ms "
             f"(serial)",
+            f"  chain   {self.terms.critical_path_s * 1e3:12.3f} ms "
+            f"(critical path)",
+            f"  predicted {self.terms.bound_combined * 1e3:10.3f} ms "
+            f"= max(overlap, chain)   [{self.terms.binding}-bound]",
             f"  bottleneck: {self.terms.dominant}",
         ]
         if self.collective_breakdown:
@@ -357,6 +384,29 @@ class _ModuleCost:
         return total
 
 
+def _critical_path_seconds(mc: _ModuleCost, entry_name: str,
+                           flop_dtype: str, ici_links: float) -> float:
+    """Longest cost-weighted dependency chain through the entry ops.
+
+    The TPU analogue of the x86 loop-carried-dependency bound: each entry
+    op weighs its own max-over-ports seconds (while bodies already
+    multiplied by trip count), and ops chained through operands cannot
+    overlap.  HLO lists definitions before uses within a computation, so
+    a single forward pass suffices.
+    """
+    finish: dict[str, float] = {}
+    best = 0.0
+    for o in mc.by_comp.get(entry_name, ()):
+        secs = mc.op_cost(o, in_fusion=False).seconds(flop_dtype, ici_links)
+        w = max(secs.values()) if secs else 0.0
+        start = 0.0
+        for nm in o.operand_names:
+            start = max(start, finish.get(nm, 0.0))
+        finish[o.name] = start + w
+        best = max(best, finish[o.name])
+    return best
+
+
 def analyze_hlo(text: str, *, ici_links: float = 1.0,
                 flop_dtype: str = "bf16") -> HloAnalysis:
     ops, entry_name = parse_module(text)
@@ -397,7 +447,9 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
 
     terms = RooflineTerms(
         compute_s=secs["MXU"] + secs["VPU"], memory_s=secs["HBM"],
-        collective_s=secs["ICI"], mxu_s=secs["MXU"], vpu_s=secs["VPU"])
+        collective_s=secs["ICI"], mxu_s=secs["MXU"], vpu_s=secs["VPU"],
+        critical_path_s=_critical_path_seconds(
+            mc, entry_name, flop_dtype, ici_links))
     return HloAnalysis(
         terms=terms, flops=total.mxu_flops + total.vpu_flops,
         mxu_flops=total.mxu_flops,

@@ -19,6 +19,7 @@ any other DB number (paper Sec. II methodology).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Callable
 
 from .database import InstructionDB
 from .isa import Instruction, Operand
@@ -121,13 +122,33 @@ class LatencyResult:
 
 
 def analyze_latency(kernel: list[Instruction], db: InstructionDB,
-                    store_forward_latency: float = 0.0) -> LatencyResult:
+                    store_forward_latency: float | None = None,
+                    lookup: "Callable[[Instruction], object] | None" = None,
+                    ) -> LatencyResult:
+    """Loop-carried-dependency bound of one assembly iteration.
+
+    Args:
+        kernel: instructions of one assembly loop iteration.
+        db: instruction-form database whose latencies weight the edges.
+        store_forward_latency: store->load forwarding latency in model
+            units; ``None`` defaults to ``db.model.store_forward_latency``.
+        lookup: optional replacement for ``db.lookup`` (the batched
+            ``AnalysisService`` passes a memoized one).
+
+    Returns:
+        :class:`LatencyResult` with the heaviest dependency cycle through
+        one wrap (iteration ``i`` -> ``i+1``) edge, per assembly iteration.
+    """
+    if store_forward_latency is None:
+        store_forward_latency = db.model.store_forward_latency
+    if lookup is None:
+        lookup = db.lookup
     n = len(kernel)
     lat: list[float] = []
     rw: list[tuple[list[str], list[str]]] = []
     store_like: list[bool] = []
     for ins in kernel:
-        entry = db.lookup(ins)
+        entry = lookup(ins)
         lat.append(entry.latency if entry is not None else 1.0)
         rw.append(_reads_writes(ins))
         store_like.append(ins.writes_memory())

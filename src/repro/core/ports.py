@@ -54,6 +54,11 @@ class PortModel:
     # Measurement unit for occupation (cycles for CPUs, seconds for TPU).
     unit: str = "cy"
     frequency_hz: float | None = None
+    # Store->load forwarding latency in `unit`, used by the critical-path /
+    # loop-carried-dependency analysis (repro.core.latency).  Calibrated per
+    # architecture like any other DB number (paper Sec. II methodology);
+    # 0.0 means "fall back to the storing instruction's own latency".
+    store_forward_latency: float = 0.0
 
     def __post_init__(self) -> None:
         if len(set(self.ports)) != len(self.ports):

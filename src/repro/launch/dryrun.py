@@ -21,7 +21,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.hlo.analyzer import analyze_hlo
+from repro.core.engine import default_service
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.models.config import SHAPES
@@ -89,7 +89,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         cost = compiled.cost_analysis() or {}
         text = compiled.as_text()
 
-    analysis = analyze_hlo(text)
+    analysis = default_service().predict_hlo(text)
     record.update({
         "status": "ok",
         "step": step.name,
@@ -110,6 +110,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "collective_s": analysis.terms.collective_s,
             "bound_overlap_s": analysis.terms.bound_overlap,
             "bound_serial_s": analysis.terms.bound_serial,
+            "critical_path_s": analysis.terms.critical_path_s,
+            "bound_combined_s": analysis.terms.bound_combined,
+            "binding": analysis.terms.binding,
             "dominant": analysis.terms.dominant,
             "collectives": {k: list(v) for k, v in
                             analysis.collective_breakdown.items()},
@@ -186,7 +189,8 @@ def main(argv=None) -> int:
             print(f"  ok: step={rec['step']} compile={rec['compile_s']}s "
                   f"temp={rec['memory'].get('temp_size_in_bytes', 0) / 2**30:.2f}GiB/dev "
                   f"dominant={pm['dominant']} "
-                  f"bound={pm['bound_overlap_s'] * 1e3:.2f}ms", flush=True)
+                  f"bound={pm['bound_combined_s'] * 1e3:.2f}ms "
+                  f"({pm['binding']}-bound)", flush=True)
             print(f"  memory_analysis: {rec['memory']}")
             print(f"  cost_analysis:   {rec['cost_analysis']}")
         elif rec["status"] == "skipped":

@@ -89,6 +89,46 @@ class ServingEngine:
         }
 
     # ------------------------------------------------------------ #
+    def dryrun_estimate(self, prompt_len: int = 128,
+                        service=None) -> dict:
+        """Static port-model latency estimate of this engine's serving
+        path — no execution, just lower/compile + the unified analysis.
+
+        Lowers the cohort prefill and the single-token decode step and
+        runs them through :meth:`AnalysisService.predict_hlo`, so the
+        returned times use the combined ``max(overlap, critical-path)``
+        bound (the same rule the x86 engine applies as
+        ``max(port_bound, LCD)``).  Returns per-phase ``HloAnalysis``
+        objects plus scalar summaries::
+
+            {"prefill": HloAnalysis, "decode": HloAnalysis,
+             "prefill_s": ..., "decode_s_per_token": ...,
+             "tokens_per_s_per_slot": ...}
+        """
+        if service is None:
+            from repro.core.engine import default_service
+            service = default_service()
+        B = self.n_slots
+        prompts = jnp.zeros((B, prompt_len), jnp.int32)
+        prefill_txt = self._prefill.lower(
+            self.params, {"tokens": prompts}).compile().as_text()
+        cache = init_cache(self.cfg, B, self.max_len)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        decode_txt = self._decode.lower(
+            self.params, tok, jnp.int32(prompt_len),
+            cache).compile().as_text()
+        prefill = service.predict_hlo(prefill_txt)
+        decode = service.predict_hlo(decode_txt)
+        decode_s = decode.terms.bound_combined
+        return {
+            "prefill": prefill, "decode": decode,
+            "prefill_s": prefill.terms.bound_combined,
+            "decode_s_per_token": decode_s,
+            "tokens_per_s_per_slot": (1.0 / decode_s) if decode_s else
+            float("inf"),
+        }
+
+    # ------------------------------------------------------------ #
     def run(self, requests: list[Request]) -> list[GenerationResult]:
         done: list[GenerationResult] = []
         queue = list(requests)

@@ -1,7 +1,10 @@
 """Unit + property tests for the paper engine itself (parser, marker
 extraction, schedulers, database lookup, HLO analyzer)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional [dev] dependency
+    from repro.testing import given, settings, st
 
 from repro.core import analyze, extract_kernel, parse_assembly
 from repro.core.arch.skylake import SKYLAKE, build_skylake_db

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional [dev] dependency
+    from repro.testing import given, settings, st
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import (decode_step, encode, init_cache, init_params,

@@ -84,11 +84,26 @@ def test_table4_port_totals_and_hidden_load():
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("arch,flag", list(pk.TABLE5))
 def test_table5_pi_predictions(arch, flag):
-    unroll, _iaca, exp_osaca, _meas = pk.TABLE5[(arch, flag)]
+    unroll, _iaca, exp_osaca, measured = pk.TABLE5[(arch, flag)]
     db = SKL if arch == "skl" else ZEN
     res = _run(db, pk.PI_KERNELS[(arch, flag)], unroll)
-    assert res.cycles_per_source_iteration == pytest.approx(
+    # the paper's OSACA column is the pure throughput (port) bound
+    assert res.port_bound_per_source_iteration == pytest.approx(
         exp_osaca, abs=0.01)
+    if flag == "O1":
+        # the store->load forwarded accumulator chain binds: the unified
+        # engine predicts above the pure port bound and within 5% of the
+        # measurement the paper could only report as an outlier
+        assert res.binding == "latency"
+        assert res.cycles_per_source_iteration > \
+            res.port_bound_per_source_iteration
+        assert abs(res.cycles_per_source_iteration - measured) \
+            / measured < 0.05
+    else:
+        # register accumulator: the port bound remains the prediction
+        assert res.binding == "throughput"
+        assert res.cycles_per_source_iteration == pytest.approx(
+            exp_osaca, abs=0.01)
 
 
 def test_table5_bottleneck_is_divider_for_o2_o3():

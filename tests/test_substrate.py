@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional [dev] dependency
+    from repro.testing import given, settings, st
 
 from repro.checkpoint import CheckpointStore
 from repro.configs import get_smoke_config

@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Docs link check: every relative markdown link in README.md and docs/
+must resolve to an existing file or directory.
+
+Used by CI (.github/workflows/ci.yml); run locally with:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# [text](target) — excluding images handled identically, code spans ignored
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_md_files() -> list[Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").rglob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    # drop fenced code blocks: asm/py snippets contain `(...)` operands
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(_EXTERNAL):
+            continue
+        if target.startswith("#"):  # intra-document anchor
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    errors: list[str] = []
+    files = iter_md_files()
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
