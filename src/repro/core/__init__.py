@@ -8,12 +8,16 @@ from .database import E, InstrForm, InstructionDB, widen_double_pumped
 from .engine import AnalysisRequest, AnalysisService, default_service
 from .isa import Instruction, parse_assembly
 from .kernel import extract_kernel
-from .latency import LatencyResult, analyze_latency
-from .ports import PortModel, U, Uop
+from .latency import LatencyResult, analyze_latency, dependency_edges
+from .ports import PipelineParams, PortModel, U, Uop
+from .sim import (SimProgram, SimResult, compile_program, simulate,
+                  simulate_kernel, simulate_many)
 
 __all__ = [
     "AnalysisRequest", "AnalysisResult", "AnalysisService", "analyze",
-    "analyze_latency", "default_service", "extract_kernel",
-    "parse_assembly", "Instruction", "InstructionDB", "InstrForm", "E",
-    "LatencyResult", "PortModel", "U", "Uop", "widen_double_pumped",
+    "analyze_latency", "default_service", "dependency_edges",
+    "extract_kernel", "parse_assembly", "Instruction", "InstructionDB",
+    "InstrForm", "E", "LatencyResult", "PipelineParams", "PortModel",
+    "SimProgram", "SimResult", "U", "Uop", "compile_program", "simulate",
+    "simulate_kernel", "simulate_many", "widen_double_pumped",
 ]

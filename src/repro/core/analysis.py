@@ -61,11 +61,21 @@ class AnalysisResult:
     lcd_cycles: float = 0.0               # loop-carried dependency bound
     latency_result: LatencyResult | None = None
     binding: str = "throughput"           # "throughput" | "latency"
+    #                                       | "simulation"
+    # --- cycle-level simulation (mode="simulate" only) -----------------
+    bound_sim: float = 0.0                # steady-state cy/asm-it; 0 = not
+    #                                       simulated
+    sim_result: object | None = None      # repro.core.sim.SimResult
 
     @property
     def cycles_per_source_iteration(self) -> float:
         """Combined bound scaled back to one *source* loop iteration."""
         return self.predicted_cycles / self.unroll_factor
+
+    @property
+    def sim_per_source_iteration(self) -> float:
+        """The simulated bound per source iteration (0 if not simulated)."""
+        return self.bound_sim / self.unroll_factor
 
     @property
     def port_bound_per_source_iteration(self) -> float:
@@ -118,9 +128,17 @@ class AnalysisResult:
                    "   (critical chain: "
                    + " -> ".join(i.mnemonic
                                  for i in self.latency_result.chain) + ")"))
+        if self.sim_result is not None:
+            lines.append(
+                f"Simulated (cycle-level): {self.bound_sim:.{precision}f} "
+                f"{unit}/asm-it"
+                + (f"   ({self.sim_result.bottleneck}-limited)"
+                   if getattr(self.sim_result, "bottleneck", "") else ""))
+        rule = "simulation" if self.sim_result is not None \
+            else "max(port, LCD)"
         lines.append(
             f"Predicted: {self.predicted_cycles:.{precision}f} {unit}/asm-it"
-            f" = max(port, LCD)"
+            f" = {rule}"
             + (f"   ({self.cycles_per_source_iteration:.{precision}f} "
                f"{unit}/src-it @ unroll "
                f"{self.unroll_factor})" if self.unroll_factor != 1 else "")
@@ -130,6 +148,35 @@ class AnalysisResult:
             for m in self.missing:
                 lines.append("  - " + m.instruction.form)
         return "\n".join(lines)
+
+
+def hidden_instruction_indices(model: PortModel,
+                               entries: list) -> set[int]:
+    """Zen store/load AGU pairing (paper Sec. III-A, Table IV): each
+    store instruction lets one load's hideable AGU uops execute in its
+    shadow; OSACA hides the first loads in program order.  Shared by the
+    analytic pipeline and the simulator so both model the same machine.
+
+    Args:
+        model: the port model (only ``store_hides_load`` matters).
+        entries: DB entry (or None) per kernel instruction.
+    Returns:
+        indices of instructions whose hideable-load uops are hidden.
+    """
+    hidden: set[int] = set()
+    if not model.store_hides_load:
+        return hidden
+    n_stores = sum(
+        1 for e in entries
+        if e is not None and any(u.kind == "store-agu" for u in e.uops))
+    budget = n_stores
+    for idx, e in enumerate(entries):
+        if budget == 0:
+            break
+        if e is not None and any(u.hideable_load for u in e.uops):
+            hidden.add(idx)
+            budget -= 1
+    return hidden
 
 
 def analyze(kernel: list[Instruction], db: InstructionDB,
@@ -176,19 +223,8 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
 
     # 2. Zen AGU pairing: each store hides one load instruction's
     #    hideable AGU uops (the first loads in program order, as OSACA does)
-    hidden_instrs: set[int] = set()
-    if model.store_hides_load:
-        n_stores = sum(
-            1 for ins, e in matched
-            if e is not None and any(u.kind == "store-agu" for u in e.uops))
-        if n_stores:
-            budget = n_stores
-            for idx, (ins, e) in enumerate(matched):
-                if budget == 0:
-                    break
-                if e is not None and any(u.hideable_load for u in e.uops):
-                    hidden_instrs.add(idx)
-                    budget -= 1
+    hidden_instrs = hidden_instruction_indices(model,
+                                               [e for _, e in matched])
 
     # 3. flatten uops and schedule
     visible_uops: list[tuple[int, object]] = []

@@ -12,7 +12,7 @@ Intel (destination-first) operand order, matching OSACA/ibench keys.
 from __future__ import annotations
 
 from ..database import E, InstrForm, InstructionDB
-from ..ports import PortModel, U
+from ..ports import PipelineParams, PortModel, U
 
 SKYLAKE = PortModel(
     name="Intel Skylake",
@@ -25,6 +25,11 @@ SKYLAKE = PortModel(
     # pi -O1 accumulator chain (SLF + vaddsd lat 4) matches the measured
     # 9.02 cy/it (paper Table V).
     store_forward_latency=5.0,
+    # Front-end / OoO window for the cycle-level simulator (Intel
+    # optimization manual [8], Skylake chapter): 4-wide allocation from
+    # the uop queue, 224-entry ROB, 97-entry unified scheduler.
+    pipeline=PipelineParams(issue_width=4, rob_size=224,
+                            scheduler_size=97, retire_width=4),
 )
 
 # Store-address uops: the paper's model sends them to ports 2|3 only

@@ -17,7 +17,7 @@ otherwise.
 from __future__ import annotations
 
 from ..database import E, InstrForm, InstructionDB, widen_double_pumped
-from ..ports import PortModel, U
+from ..ports import PipelineParams, PortModel, U
 
 ZEN = PortModel(
     name="AMD Zen",
@@ -30,6 +30,12 @@ ZEN = PortModel(
     # pi -O1 stack-accumulator chain (SLF + vaddsd lat 3) tracks the
     # measured 11.48 cy/it (paper Table V).
     store_forward_latency=8.5,
+    # Front-end / OoO window for the cycle-level simulator (AMD SOG for
+    # family 17h [12]): 6 micro-ops dispatched per cycle, 192-entry
+    # retire queue, 84-entry ALU scheduling queue capacity (6 x 14),
+    # retire up to 8 ops per cycle.
+    pipeline=PipelineParams(issue_width=6, rob_size=192,
+                            scheduler_size=84, retire_width=8),
 )
 
 _FMUL = "0|1"      # FP mul / FMA pipes

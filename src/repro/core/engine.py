@@ -25,8 +25,11 @@ Entry points: :meth:`AnalysisService.predict` (one request),
 :meth:`~AnalysisService.predict_async` (awaitable), and
 :meth:`~AnalysisService.sweep` (full kernels x archs x schedulers grid).
 
-Every prediction is the *combined* bound ``max(port_bound, LCD)`` from
-:func:`repro.core.analysis.analyze` — see docs/prediction-model.md.
+Every analytic prediction is the *combined* bound ``max(port_bound,
+LCD)`` from :func:`repro.core.analysis.analyze`; ``mode="simulate"``
+requests additionally run the cycle-level pipeline simulator
+(``repro.core.sim``) and report its steady state as ``bound_sim`` —
+see docs/prediction-model.md and docs/simulation.md.
 """
 from __future__ import annotations
 
@@ -61,6 +64,12 @@ class AnalysisRequest:
         unroll_factor: assembly iterations per source iteration.
         latency_bound: fold the LCD bound into the prediction (default).
         syntax: ``"att"`` or ``"intel"`` when ``kernel`` is text.
+        mode: ``"analytic"`` (the combined ``max(port_bound, LCD)``
+            bound, default) or ``"simulate"`` (additionally run the
+            cycle-level pipeline simulator, ``repro.core.sim`` — the
+            result then carries ``bound_sim``/``sim_result``, and
+            ``predicted_cycles`` is the simulated steady state floored
+            at the LCD bound).
     """
 
     kernel: str | tuple[Instruction, ...]
@@ -69,6 +78,7 @@ class AnalysisRequest:
     unroll_factor: int = 1
     latency_bound: bool = True
     syntax: str = "att"
+    mode: str = "analytic"
 
 
 @dataclass
@@ -83,6 +93,8 @@ class ServiceStats:
     lp_misses: int = 0
     hlo_hits: int = 0
     hlo_misses: int = 0
+    sim_runs: int = 0        # cycle-level simulations actually executed
+    #                          (cache hits are counted in result_hits)
 
     def as_dict(self) -> dict[str, int]:
         return dict(vars(self))
@@ -103,6 +115,7 @@ class AnalysisService:
         self._lookups: dict[str, Callable[[Instruction], object]] = {}
         self._lp_cache: dict[tuple, list[ScheduledUop]] = {}
         self._results: dict[tuple, AnalysisResult] = {}
+        self._sim_cache: dict[tuple, object] = {}   # SimResult by kernel
         self._hlo_cache: dict[tuple, object] = {}
         self._max_workers = max_workers
         self.stats = ServiceStats()
@@ -121,6 +134,8 @@ class AnalysisService:
             self._lookups.pop(key, None)
             for k in [k for k in self._results if k[0] == key]:
                 del self._results[k]
+            for k in [k for k in self._sim_cache if k[0] == key]:
+                del self._sim_cache[k]
 
     def database(self, arch: str) -> InstructionDB:
         """The (cached) instruction DB for ``arch``, built on first use."""
@@ -194,40 +209,103 @@ class AnalysisService:
             return tuple(extract_kernel(req.kernel, syntax=req.syntax))
         return tuple(req.kernel)
 
-    def predict(self, request: AnalysisRequest) -> AnalysisResult:
-        """Run the combined ``max(port_bound, LCD)`` pipeline for one
-        request, drawing every sub-step from the service caches."""
-        if isinstance(request.kernel, str):
+    @staticmethod
+    def _kernel_id(req: AnalysisRequest) -> tuple:
+        if isinstance(req.kernel, str):
             # raw source keys by (text, syntax): the same bytes parse
             # differently under AT&T vs Intel, and keying pre-parse also
             # skips extract_kernel entirely on a hit
-            kid = ("src", request.kernel, request.syntax)
-        else:
-            # Instruction is a frozen dataclass: hashing the instances
-            # themselves keys on the full parse (operand order included),
-            # not just the source text, so e.g. the same reg-reg move
-            # parsed under AT&T vs Intel order cannot collide
-            kid = ("parsed", tuple(request.kernel))
-        key = (canonical_arch(request.arch), kid,
+            return ("src", req.kernel, req.syntax)
+        # Instruction is a frozen dataclass: hashing the instances
+        # themselves keys on the full parse (operand order included),
+        # not just the source text, so e.g. the same reg-reg move
+        # parsed under AT&T vs Intel order cannot collide
+        return ("parsed", tuple(req.kernel))
+
+    def predict(self, request: AnalysisRequest) -> AnalysisResult:
+        """Run the prediction pipeline for one request, drawing every
+        sub-step from the service caches.
+
+        ``mode="analytic"``: the combined ``max(port_bound, LCD)``
+        bound.  ``mode="simulate"``: the analytic pass (cached and
+        shared with analytic requests) plus the cycle-level pipeline
+        simulation; the returned result carries ``bound_sim`` and a
+        three-way ``binding``.
+        """
+        if request.mode not in ("analytic", "simulate"):
+            raise ValueError(f"unknown mode {request.mode!r} "
+                             "(expected 'analytic' or 'simulate')")
+        key = (canonical_arch(request.arch), self._kernel_id(request),
                request.scheduler, request.unroll_factor,
-               request.latency_bound)
+               request.latency_bound, request.mode)
         with self._lock:
             hit = self._results.get(key)
             if hit is not None:
                 self.stats.result_hits += 1
                 return hit
             self.stats.result_misses += 1
-        kernel = self._kernel_of(request)
-        db = self.database(request.arch)
-        res = analyze(
-            list(kernel), db, scheduler=request.scheduler,
-            unroll_factor=request.unroll_factor,
-            latency_bound=request.latency_bound,
-            schedule_fn=self._schedule_fn(db.model, request.scheduler),
-            lookup=self._lookup_fn(request.arch))
+        if request.mode == "simulate":
+            res = self._predict_simulated(request)
+        else:
+            kernel = self._kernel_of(request)
+            db = self.database(request.arch)
+            res = analyze(
+                list(kernel), db, scheduler=request.scheduler,
+                unroll_factor=request.unroll_factor,
+                latency_bound=request.latency_bound,
+                schedule_fn=self._schedule_fn(db.model, request.scheduler),
+                lookup=self._lookup_fn(request.arch))
         with self._lock:
             self._results[key] = res
         return res
+
+    def _predict_simulated(self, request: AnalysisRequest
+                           ) -> AnalysisResult:
+        """The ``mode="simulate"`` pipeline: analytic result (served
+        from / stored in the shared cache) refined by the cycle-level
+        simulator."""
+        import dataclasses
+
+        from .sim import compile_program, simulate
+
+        analytic = self.predict(
+            dataclasses.replace(request, mode="analytic"))
+        # the simulation depends only on (arch, kernel) — not on the
+        # scheduler / unroll / latency_bound knobs of the analytic pass —
+        # so it is cached on its own key and shared across e.g. a
+        # multi-scheduler sweep.  Like the result cache, there is no
+        # in-flight deduplication: identical cold-cache cells submitted
+        # concurrently may each simulate (correctly) — see predict_batch.
+        sim_key = (canonical_arch(request.arch),
+                   self._kernel_id(request))
+        with self._lock:
+            sim = self._sim_cache.get(sim_key)
+        if sim is None:
+            kernel = self._kernel_of(request)
+            db = self.database(request.arch)
+            with self._lock:
+                self.stats.sim_runs += 1
+            sim = simulate(compile_program(
+                list(kernel), db, lookup=self._lookup_fn(request.arch)))
+            with self._lock:
+                self._sim_cache[sim_key] = sim
+        bound_sim = sim.cycles_per_iteration
+        analytic_bound = max(analytic.port_bound_cycles,
+                             analytic.lcd_cycles)
+        predicted = max(bound_sim, analytic.lcd_cycles)
+        # three-way binding: "simulation" whenever the simulated steady
+        # state materially deviates from the analytic bound — above it
+        # (front-end / finite-window effects) or below it (discrete
+        # dispatch beating the uniform averaging, paper Sec. III-B);
+        # otherwise the analytic label still names the constraint that
+        # produces the headline
+        if abs(bound_sim - analytic_bound) > analytic_bound * 0.02 + 1e-9:
+            binding = "simulation"
+        else:
+            binding = analytic.binding
+        return dataclasses.replace(
+            analytic, bound_sim=bound_sim, sim_result=sim,
+            predicted_cycles=predicted, binding=binding)
 
     def predict_batch(self, requests: Sequence[AnalysisRequest],
                       parallel: bool = False) -> list[AnalysisResult]:
@@ -256,12 +334,14 @@ class AnalysisService:
               schedulers: Iterable[str] = ("uniform",),
               unroll_factors: Mapping[str, int] | None = None,
               parallel: bool = False,
+              mode: str = "analytic",
               ) -> dict[tuple[str, str, str], AnalysisResult]:
         """Full grid: ``{(kernel_name, arch, scheduler): AnalysisResult}``.
 
         ``unroll_factors`` optionally maps kernel names to their unroll
-        factor (default 1).  This is the bulk entry point used by
-        ``benchmarks/paper_tables.py``-style sweeps.
+        factor (default 1); ``mode="simulate"`` runs the whole grid
+        through the cycle-level simulator backend.  This is the bulk
+        entry point used by ``benchmarks/paper_tables.py``-style sweeps.
         """
         unroll_factors = unroll_factors or {}
         names, reqs = [], []
@@ -271,7 +351,8 @@ class AnalysisService:
                     names.append((name, arch, sched))
                     reqs.append(AnalysisRequest(
                         kernel=kern, arch=arch, scheduler=sched,
-                        unroll_factor=unroll_factors.get(name, 1)))
+                        unroll_factor=unroll_factors.get(name, 1),
+                        mode=mode))
         results = self.predict_batch(reqs, parallel=parallel)
         return dict(zip(names, results))
 
@@ -279,16 +360,22 @@ class AnalysisService:
     # HLO (TPU) path
     # ------------------------------------------------------------------
     def predict_hlo(self, text: str, *, ici_links: float = 1.0,
-                    flop_dtype: str = "bf16"):
+                    flop_dtype: str = "bf16", mode: str = "analytic"):
         """Memoized :func:`repro.core.hlo.analyzer.analyze_hlo`.
 
         Results carry the combined ``max(overlap, critical-path)`` bound
-        (``HloAnalysis.terms.bound_combined``); the cache key is the
-        module-text digest, so the serving dry-run and roofline sweeps
-        share one pass per compiled program.
+        (``HloAnalysis.terms.bound_combined``); ``mode="simulate"``
+        additionally list-schedules the entry ops onto the TPU ports
+        (``repro.core.sim.dag``) and fills ``terms.sim_s`` /
+        ``terms.bound_sim``.  The cache key is the module-text digest,
+        so the serving dry-run and roofline sweeps share one pass per
+        compiled program.
         """
+        if mode not in ("analytic", "simulate"):
+            raise ValueError(f"unknown mode {mode!r} "
+                             "(expected 'analytic' or 'simulate')")
         digest = hashlib.sha256(text.encode()).hexdigest()
-        key = (digest, ici_links, flop_dtype)
+        key = (digest, ici_links, flop_dtype, mode)
         with self._lock:
             hit = self._hlo_cache.get(key)
             if hit is not None:
@@ -296,7 +383,8 @@ class AnalysisService:
                 return hit
             self.stats.hlo_misses += 1
         from .hlo.analyzer import analyze_hlo
-        res = analyze_hlo(text, ici_links=ici_links, flop_dtype=flop_dtype)
+        res = analyze_hlo(text, ici_links=ici_links, flop_dtype=flop_dtype,
+                          simulate=(mode == "simulate"))
         with self._lock:
             self._hlo_cache[key] = res
         return res
@@ -308,6 +396,7 @@ class AnalysisService:
             self._lookups.clear()
             self._lp_cache.clear()
             self._results.clear()
+            self._sim_cache.clear()
             self._hlo_cache.clear()
             self.stats = ServiceStats()
 

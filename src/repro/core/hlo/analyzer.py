@@ -91,6 +91,8 @@ class RooflineTerms:
     mxu_s: float = 0.0
     vpu_s: float = 0.0
     critical_path_s: float = 0.0
+    # list-scheduled makespan (repro.core.sim.dag); 0.0 = not simulated
+    sim_s: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -110,6 +112,13 @@ class RooflineTerms:
     def bound_combined(self) -> float:
         """max(throughput bound, critical path) — the tighter estimate."""
         return max(self.bound_overlap, self.critical_path_s)
+
+    @property
+    def bound_sim(self) -> float:
+        """The list-scheduled makespan when simulated (it satisfies
+        ``bound_combined <= bound_sim <= bound_serial``), else
+        ``bound_combined``."""
+        return self.sim_s if self.sim_s > 0.0 else self.bound_combined
 
     @property
     def binding(self) -> str:
@@ -151,6 +160,9 @@ class HloAnalysis:
             f"= max(overlap, chain)   [{self.terms.binding}-bound]",
             f"  bottleneck: {self.terms.dominant}",
         ]
+        if self.terms.sim_s > 0.0:
+            lines.insert(-1, f"  scheduled {self.terms.sim_s * 1e3:10.3f}"
+                         f" ms (list-scheduled DAG simulation)")
         if self.collective_breakdown:
             lines.append("  collectives:")
             for k, (c, b) in sorted(self.collective_breakdown.items()):
@@ -407,8 +419,26 @@ def _critical_path_seconds(mc: _ModuleCost, entry_name: str,
     return best
 
 
+def _scheduled_seconds(mc: _ModuleCost, entry_name: str,
+                       flop_dtype: str, ici_links: float) -> float:
+    """List-scheduled makespan of the entry computation: the DAG
+    analogue of the cycle-level x86 simulator (``repro.core.sim.dag``).
+    Refines ``max(bound_overlap, critical_path)`` by modelling port
+    contention *and* dependency chains at once."""
+    from ..sim.dag import DagNode, schedule_dag
+
+    nodes = []
+    for o in mc.by_comp.get(entry_name, ()):
+        secs = mc.op_cost(o, in_fusion=False).seconds(flop_dtype, ici_links)
+        occ = {k: v for k, v in secs.items() if v > 0.0}
+        nodes.append(DagNode(name=o.name, occupation=occ,
+                             deps=tuple(o.operand_names)))
+    return schedule_dag(nodes).makespan
+
+
 def analyze_hlo(text: str, *, ici_links: float = 1.0,
-                flop_dtype: str = "bf16") -> HloAnalysis:
+                flop_dtype: str = "bf16",
+                simulate: bool = False) -> HloAnalysis:
     ops, entry_name = parse_module(text)
     mc = _ModuleCost(ops)
 
@@ -449,7 +479,9 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
         compute_s=secs["MXU"] + secs["VPU"], memory_s=secs["HBM"],
         collective_s=secs["ICI"], mxu_s=secs["MXU"], vpu_s=secs["VPU"],
         critical_path_s=_critical_path_seconds(
-            mc, entry_name, flop_dtype, ici_links))
+            mc, entry_name, flop_dtype, ici_links),
+        sim_s=_scheduled_seconds(mc, entry_name, flop_dtype, ici_links)
+        if simulate else 0.0)
     return HloAnalysis(
         terms=terms, flops=total.mxu_flops + total.vpu_flops,
         mxu_flops=total.mxu_flops,

@@ -121,24 +121,16 @@ class LatencyResult:
         return "\n".join(lines)
 
 
-def analyze_latency(kernel: list[Instruction], db: InstructionDB,
-                    store_forward_latency: float | None = None,
-                    lookup: "Callable[[Instruction], object] | None" = None,
-                    ) -> LatencyResult:
-    """Loop-carried-dependency bound of one assembly iteration.
-
-    Args:
-        kernel: instructions of one assembly loop iteration.
-        db: instruction-form database whose latencies weight the edges.
-        store_forward_latency: store->load forwarding latency in model
-            units; ``None`` defaults to ``db.model.store_forward_latency``.
-        lookup: optional replacement for ``db.lookup`` (the batched
-            ``AnalysisService`` passes a memoized one).
-
-    Returns:
-        :class:`LatencyResult` with the heaviest dependency cycle through
-        one wrap (iteration ``i`` -> ``i+1``) edge, per assembly iteration.
-    """
+def dependency_edges(kernel: list[Instruction], db: InstructionDB,
+                     store_forward_latency: float | None = None,
+                     lookup: "Callable[[Instruction], object] | None" = None,
+                     ) -> list[tuple[int, int, float, bool]]:
+    """Dependency edges of one assembly iteration: ``(src, dst, weight,
+    wrap)`` where ``weight`` is the producer latency (or the store->load
+    forwarding latency for forwarded memory reads) and ``wrap`` marks
+    loop-carried edges (value produced in iteration ``i``, consumed in
+    ``i+1``).  Shared by :func:`analyze_latency` (LCD bound) and the
+    cycle-level simulator's wakeup logic (``repro.core.sim``)."""
     if store_forward_latency is None:
         store_forward_latency = db.model.store_forward_latency
     if lookup is None:
@@ -175,6 +167,31 @@ def analyze_latency(kernel: list[Instruction], db: InstructionDB,
                     edges.append((widx, i, weight, True))
             for k in writes:
                 writer[k] = (it, i)
+    return edges
+
+
+def analyze_latency(kernel: list[Instruction], db: InstructionDB,
+                    store_forward_latency: float | None = None,
+                    lookup: "Callable[[Instruction], object] | None" = None,
+                    ) -> LatencyResult:
+    """Loop-carried-dependency bound of one assembly iteration.
+
+    Args:
+        kernel: instructions of one assembly loop iteration.
+        db: instruction-form database whose latencies weight the edges.
+        store_forward_latency: store->load forwarding latency in model
+            units; ``None`` defaults to ``db.model.store_forward_latency``.
+        lookup: optional replacement for ``db.lookup`` (the batched
+            ``AnalysisService`` passes a memoized one).
+
+    Returns:
+        :class:`LatencyResult` with the heaviest dependency cycle through
+        one wrap (iteration ``i`` -> ``i+1``) edge, per assembly iteration.
+    """
+    n = len(kernel)
+    edges = dependency_edges(
+        kernel, db, store_forward_latency=store_forward_latency,
+        lookup=lookup)
 
     # LCD: for each wrap edge (u -> v), heaviest intra-iteration DAG path
     # v ->* u, plus the wrap weight, plus lat consumed at u? (edge weights

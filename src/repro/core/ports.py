@@ -40,6 +40,29 @@ def U(ports: str, cycles: float = 1.0, *, hideable_load: bool = False,
 
 
 @dataclass(frozen=True)
+class PipelineParams:
+    """Front-end / out-of-order window parameters of one architecture.
+
+    Consumed by the cycle-level simulator (``repro.core.sim``): the
+    analytic port model assumes an infinitely wide front end and an
+    infinite scheduler window; these parameters are exactly what the
+    simulator adds back.  Values come from the vendor optimization
+    manuals the paper cites for its machine models (Intel [8], AMD [12]).
+    """
+
+    issue_width: int = 4        # uops issued into the backend per cycle
+    rob_size: int = 224         # reorder-buffer entries (uops in flight)
+    scheduler_size: int = 97    # unified scheduler / reservation stations
+    retire_width: int = 4       # uops retired (ROB entries freed) per cycle
+
+    def __post_init__(self) -> None:
+        for f in ("issue_width", "rob_size", "scheduler_size",
+                  "retire_width"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1")
+
+
+@dataclass(frozen=True)
 class PortModel:
     """A named machine: port list plus scheduling peculiarities."""
 
@@ -59,6 +82,9 @@ class PortModel:
     # architecture like any other DB number (paper Sec. II methodology);
     # 0.0 means "fall back to the storing instruction's own latency".
     store_forward_latency: float = 0.0
+    # Front-end / OoO-window parameters for the cycle-level simulator
+    # (repro.core.sim); None means "analytic model only" (e.g. TPU).
+    pipeline: PipelineParams | None = None
 
     def __post_init__(self) -> None:
         if len(set(self.ports)) != len(self.ports):

@@ -12,7 +12,7 @@ bottleneck C + max-flow feasibility (uop -> eligible ports, port cap C).
 """
 from __future__ import annotations
 
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass
 
 from .ports import PortModel, Uop
@@ -30,6 +30,11 @@ def schedule_uniform(model: PortModel,
                      uops: list[tuple[int, Uop]]) -> list[ScheduledUop]:
     out = []
     for idx, uop in uops:
+        if not uop.ports:
+            # port-less uop (e.g. an eliminated register move): occupies
+            # nothing, contributes zero to every port total
+            out.append(ScheduledUop(uop, idx, {}))
+            continue
         share = uop.cycles / len(uop.ports)
         out.append(ScheduledUop(uop, idx, {p: share for p in uop.ports}))
     return out
@@ -56,9 +61,9 @@ class _Flow:
         total = 0.0
         while True:
             parent = {s: s}
-            queue = [s]
+            queue = deque([s])
             while queue and t not in parent:
-                u = queue.pop(0)
+                u = queue.popleft()
                 for v, c in self.cap[u].items():
                     if c > eps and v not in parent:
                         parent[v] = u
@@ -85,21 +90,44 @@ def schedule_balanced(model: PortModel,
                       iterations: int = 50) -> list[ScheduledUop]:
     if not uops:
         return []
+    # uops with an empty eligible-port set (pure-register-move streams
+    # after move elimination) cannot be routed: they get an empty
+    # assignment and are excluded from the flow problem.  Without this,
+    # feasible(hi) can never satisfy the demand and the binary search
+    # asserts (and all-empty kernels would take max() of an empty set).
+    routable = [(i, idx, uop) for i, (idx, uop) in enumerate(uops)
+                if uop.ports]
+    out: list[ScheduledUop | None] = [
+        None if uop.ports else ScheduledUop(uop, idx, {})
+        for idx, uop in uops]
+    if not routable:
+        return [s for s in out if s is not None]
+
     ports = list(model.ports)
     pindex = {p: i for i, p in enumerate(ports)}
-    n_uops = len(uops)
-    total = sum(u.cycles for _, u in uops)
-    lo = max(u.cycles for _, u in uops if len(u.ports) == 1) \
-        if any(len(u.ports) == 1 for _, u in uops) else 0.0
+    n_uops = len(routable)
+    total = sum(u.cycles for _, _, u in routable)
+    lo = max((u.cycles for _, _, u in routable if len(u.ports) == 1),
+             default=0.0)
     lo = max(lo, total / len(ports))
     hi = total
 
+    # feasible() is memoized on the binary-search midpoint grid: the
+    # search interval halves every step, so once it shrinks below the
+    # grid resolution every further midpoint is a repeat and the
+    # remaining iterations cost a dict hit instead of a max-flow solve
+    # (a measurable win for AnalysisService.sweep over many kernels).
+    memo: dict[float, _Flow | None] = {}
+
     def feasible(C: float) -> _Flow | None:
+        key = round(C, 9)
+        if key in memo:
+            return memo[key]
         # nodes: 0 = src, 1..n_uops = uops, then ports, then sink
         fl = _Flow(1 + n_uops + len(ports) + 1)
         sink = 1 + n_uops + len(ports)
         need = 0.0
-        for i, (_, uop) in enumerate(uops):
+        for i, (_, _, uop) in enumerate(routable):
             fl.add(0, 1 + i, uop.cycles)
             need += uop.cycles
             for p in uop.ports:
@@ -107,7 +135,9 @@ def schedule_balanced(model: PortModel,
         for p in ports:
             fl.add(1 + n_uops + pindex[p], sink, C)
         got = fl.maxflow(0, sink)
-        return fl if got >= need - 1e-9 else None
+        res = fl if got >= need - 1e-9 else None
+        memo[key] = res
+        return res
 
     best_flow = feasible(hi)
     assert best_flow is not None
@@ -118,18 +148,19 @@ def schedule_balanced(model: PortModel,
             best_flow, hi = fl, mid
         else:
             lo = mid
+        if hi - lo <= 1e-9 * max(1.0, hi):
+            break                   # converged below the memo grid
     # recover per-uop assignment from residual graph: flow on edge
     # (uop -> port) = cap added originally - residual remaining
-    out = []
-    for i, (idx, uop) in enumerate(uops):
+    for i, (pos, idx, uop) in enumerate(routable):
         assignment: dict[str, float] = {}
         for p in uop.ports:
             pnode = 1 + n_uops + pindex[p]
             sent = uop.cycles - best_flow.cap[1 + i][pnode]
             if sent > 1e-9:
                 assignment[p] = sent
-        out.append(ScheduledUop(uop, idx, assignment))
-    return out
+        out[pos] = ScheduledUop(uop, idx, assignment)
+    return [s for s in out if s is not None]
 
 
 SCHEDULERS = {

@@ -1,0 +1,296 @@
+"""Vectorized batch driver for the pipeline simulator.
+
+``pipeline.simulate`` steps one kernel cycle by cycle — the reference
+semantics.  This module simulates *many* kernels at once in a
+struct-of-arrays pass: every per-uop quantity (issue cycle, operand
+readiness, dispatch cycle, retire cycle) becomes a ``[batch]`` numpy
+vector, and the driver sweeps the padded uop slots of all kernels in
+lockstep, iteration by iteration.  The arrays are plain numpy and
+jnp-compatible; the recurrences are the JAX-friendly formulation of the
+same machine (timestamp algebra instead of a tick loop).
+
+The reformulation replaces the per-cycle oldest-ready arbitration with
+its program-order dataflow equivalent: each uop books the eligible port
+with the least cumulative occupation, and a port's occupation total acts
+as its earliest back-to-back start time (``start = max(ready,
+cap[port])``, ``cap[port] += cycles``).  This models every port as
+perfectly packable — gaps left by dependency-delayed uops can be filled
+by younger work, which is what the tick loop's out-of-order dispatch
+achieves explicitly.  The cost of that simplification is a longer
+transient on kernels whose dependency chain initially outpaces a
+saturated port (idle port time is "banked" until the backlog catches
+up), so the driver runs more iterations than the reference simulator
+and requires the delta pattern to repeat three times before declaring a
+steady state; ``tests/test_simulator.py`` locks the two drivers'
+agreement on the paper kernels.  Front-end width, ROB and scheduler
+occupancy, and retirement bandwidth are modelled identically, as
+ring-buffer recurrences:
+
+    issue[g]  >= issue[g - issue_width] + 1          (front end)
+    issue[g]  >= retire[g - rob_size]                (finite ROB)
+    issue[g]  >= dispatch[g' - scheduler_size]       (finite scheduler)
+    retire[g] >= retire[g - retire_width] + 1        (retire bandwidth)
+
+Batches mixing architectures are grouped by machine model internally;
+each group runs as one vectorized pass.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..ports import PipelineParams
+from .pipeline import DEFAULT_PARAMS, SimProgram, SimResult, _classify
+
+_NEG = -1e18
+
+
+@dataclass
+class _Group:
+    """Programs sharing one machine model, padded to common shapes."""
+
+    programs: list[SimProgram]
+    indices: list[int]                # positions in the caller's batch
+
+
+def _composed_edges(prog: SimProgram) -> list[tuple[int, int, float, bool]]:
+    """Dependency edges with zero-uop producers composed away.
+
+    The slot sweep only learns execution times at uop slots, so an edge
+    whose producer compiled to zero uops (unmatched form) would read the
+    uninitialised sentinel and silently vanish.  The reference simulator
+    treats such producers as executing the moment their own operands are
+    ready; the dataflow equivalent is edge composition: ``s -w1-> z
+    -w2-> d`` with zero-uop ``z`` becomes ``s -(w1+w2)-> d``.  Wrap hops
+    saturate at one iteration (the consumer looks back exactly one
+    iteration, which can only over-delay — conservative), and self-loops
+    on zero-uop nodes are dropped to keep the rewrite finite.
+    """
+    has_uops = [False] * prog.n_instructions
+    for u in prog.uops:
+        has_uops[u.instr_index] = True
+    edges = [(s, d, w, bool(h)) for s, d, w, h in prog.edges]
+    for _ in range(prog.n_instructions):
+        if all(has_uops[s] for s, _, _, _ in edges):
+            break
+        in_by: dict[int, list[tuple[int, int, float, bool]]] = {}
+        for e in edges:
+            in_by.setdefault(e[1], []).append(e)
+        out: dict[tuple[int, int, bool], float] = {}
+
+        def keep(s: int, d: int, w: float, h: bool) -> None:
+            k = (s, d, h)
+            out[k] = max(out.get(k, float("-inf")), w)
+
+        for s, d, w, h in edges:
+            if has_uops[s]:
+                keep(s, d, w, h)
+                continue
+            for s2, _, w2, h2 in in_by.get(s, ()):
+                if s2 == s:
+                    continue          # zero-uop self-loop: drop
+                keep(s2, d, w + w2, h or h2)
+        edges = [(s, d, w, h) for (s, d, h), w in out.items()]
+    return [e for e in edges if has_uops[e[0]]]
+
+
+def simulate_many(programs: list[SimProgram],
+                  params: PipelineParams | None = None, *,
+                  n_iterations: int = 96,
+                  warmup_iterations: int = 4,
+                  max_period: int = 4) -> list[SimResult]:
+    """Simulate every program; results match the input order.
+
+    Args:
+        programs: compiled loop bodies (see
+            :func:`repro.core.sim.pipeline.compile_program`); mixed
+            architectures are allowed.
+        params: pipeline parameters forced for the whole batch;
+            default: each program's own ``model.pipeline``.
+        n_iterations: loop bodies simulated per kernel (fixed, unlike
+            the reference simulator's adaptive convergence loop — the
+            vectorized pass has no early exit).
+        warmup_iterations: iterations excluded from the steady-state
+            slope.
+        max_period: longest periodic delta pattern accepted as
+            convergence.
+    """
+    groups: dict[tuple, _Group] = {}
+    for pos, prog in enumerate(programs):
+        p = params or prog.model.pipeline or DEFAULT_PARAMS
+        key = (prog.model.ports, p)
+        g = groups.setdefault(key, _Group([], []))
+        g.programs.append(prog)
+        g.indices.append(pos)
+
+    out: list[SimResult | None] = [None] * len(programs)
+    for (ports, p), g in groups.items():
+        results = _simulate_group(g.programs, ports, p, n_iterations,
+                                  warmup_iterations, max_period)
+        for pos, res in zip(g.indices, results):
+            out[pos] = res
+    return out  # type: ignore[return-value]
+
+
+def _simulate_group(programs: list[SimProgram], ports: tuple[str, ...],
+                    params: PipelineParams, n_iterations: int,
+                    warmup: int, max_period: int) -> list[SimResult]:
+    B = len(programs)
+    P = len(ports)
+    pindex = {p: i for i, p in enumerate(ports)}
+    U = max((len(p.uops) for p in programs), default=0)
+    I = max((p.n_instructions for p in programs), default=0)
+    edge_lists = [_composed_edges(p) for p in programs]
+    E = max((len(es) for es in edge_lists), default=0)
+    if U == 0:
+        return [SimResult(0.0, 0, True, "empty", 0.0, {}, params)
+                for _ in programs]
+
+    # ---- pack struct-of-arrays ---------------------------------------
+    active = np.zeros((B, U), bool)         # real (non-padding) slots
+    is_first = np.zeros((B, U), bool)       # first slot of its instruction
+    instr_of = np.zeros((B, U), np.int64)
+    has_port = np.zeros((B, U), bool)
+    elig = np.zeros((B, U, P), bool)
+    cyc = np.ones((B, U))                   # port occupation cycles
+    lat = np.ones((B, U))                   # instruction latency
+    e_valid = np.zeros((B, E), bool)
+    e_src = np.zeros((B, E), np.int64)
+    e_dst = np.zeros((B, E), np.int64)
+    e_w = np.zeros((B, E))
+    e_wrap = np.zeros((B, E), bool)
+    for b, prog in enumerate(programs):
+        seen: set[int] = set()
+        for u, uop in enumerate(prog.uops):
+            active[b, u] = True
+            instr_of[b, u] = uop.instr_index
+            if uop.instr_index not in seen:
+                seen.add(uop.instr_index)
+                is_first[b, u] = True
+            if uop.ports:
+                has_port[b, u] = True
+                for pt in uop.ports:
+                    elig[b, u, pindex[pt]] = True
+            cyc[b, u] = max(1.0, uop.cycles)
+            lat[b, u] = max(1.0, prog.latency[uop.instr_index])
+        for e, (src, dst, w, wrap) in enumerate(edge_lists[b]):
+            e_valid[b, e] = True
+            e_src[b, e], e_dst[b, e], e_w[b, e] = src, dst, w
+            e_wrap[b, e] = wrap
+
+    n_uops = active.sum(axis=1)             # [B]
+    rng = np.arange(B)
+
+    # ---- state -------------------------------------------------------
+    port_cap = np.zeros((B, P))     # cumulative booked cycles per port
+    exec_prev = np.full((B, max(I, 1)), _NEG)
+    last_issue = np.zeros(B)
+    last_retire = np.zeros(B)
+    issue_ring = np.full((B, params.issue_width), _NEG)
+    retire_ring = np.full((B, params.rob_size), _NEG)
+    disp_ring = np.full((B, params.scheduler_size), _NEG)
+    rw_ring = np.full((B, params.retire_width), _NEG)
+    g_ctr = np.zeros(B, np.int64)           # uops issued (ROB/front end)
+    gp_ctr = np.zeros(B, np.int64)          # port uops issued (scheduler)
+    iter_end = np.zeros((B, n_iterations))
+
+    for it in range(n_iterations):
+        exec_cur = np.full((B, max(I, 1)), _NEG)
+        ready_cur = np.zeros((B, max(I, 1)))
+        for u in range(U):
+            a = active[:, u]
+            if not a.any():
+                continue
+            i_b = instr_of[:, u]
+
+            # -- issue: in-order, front-end width, finite ROB/scheduler
+            t = np.maximum(last_issue, 0.0)
+            t = np.maximum(t, issue_ring[rng, g_ctr % params.issue_width]
+                           + 1.0)
+            t = np.maximum(t, retire_ring[rng, g_ctr % params.rob_size])
+            sched_gate = disp_ring[rng, gp_ctr % params.scheduler_size]
+            t = np.maximum(t, np.where(has_port[:, u], sched_gate, _NEG))
+            t = np.ceil(t)
+            issue_t = np.where(a, t, last_issue)
+
+            # -- operand readiness (first slot of each instruction)
+            need = a & is_first[:, u]
+            if need.any() and E:
+                m = e_valid & (e_dst == i_b[:, None]) & need[:, None]
+                src_exec = np.where(
+                    e_wrap,
+                    np.take_along_axis(exec_prev, e_src, axis=1),
+                    np.take_along_axis(exec_cur, e_src, axis=1))
+                contrib = np.where(m, src_exec + e_w, 0.0)
+                contrib = np.maximum(contrib, 0.0)   # pit < 0: no producer
+                ready = contrib.max(axis=1)
+                ready_cur[need, i_b[need]] = ready[need]
+            ready_t = ready_cur[rng, i_b]
+
+            # -- dispatch: least-loaded eligible port; the port's booked
+            #    capacity is its earliest back-to-back start time
+            pf = np.where(elig[:, u], port_cap, np.inf)
+            choice = pf.argmin(axis=1)
+            lb = np.maximum(issue_t + 1.0, np.ceil(ready_t))
+            start = np.maximum(lb, pf[rng, choice])
+            start = np.where(has_port[:, u], start, issue_t)
+            disp = np.where(a, start, 0.0)
+            upd = a & has_port[:, u]
+            port_cap[rng[upd], choice[upd]] += cyc[:, u][upd]
+            new_exec = np.maximum(exec_cur[rng, i_b], disp)
+            exec_cur[rng[a], i_b[a]] = new_exec[a]
+
+            # -- retire: in-order, bounded bandwidth
+            complete = disp + lat[:, u]
+            r = np.maximum(complete, last_retire)
+            r = np.maximum(r, rw_ring[rng, g_ctr % params.retire_width]
+                           + 1.0)
+            retire_t = np.where(a, r, last_retire)
+
+            # -- commit state for active elements
+            issue_ring[rng[a], (g_ctr % params.issue_width)[a]] = \
+                issue_t[a]
+            retire_ring[rng[a], (g_ctr % params.rob_size)[a]] = retire_t[a]
+            rw_ring[rng[a], (g_ctr % params.retire_width)[a]] = retire_t[a]
+            disp_ring[rng[upd], (gp_ctr % params.scheduler_size)[upd]] = \
+                disp[upd]
+            last_issue = np.where(a, issue_t, last_issue)
+            last_retire = np.where(a, retire_t, last_retire)
+            g_ctr = g_ctr + a
+            gp_ctr = gp_ctr + upd
+        iter_end[:, it] = last_retire
+        exec_prev = exec_cur
+
+    # ---- steady-state cycles/iteration -------------------------------
+    deltas = np.diff(iter_end[:, warmup:], axis=1)
+    span = deltas.shape[1]
+    cpi = deltas[:, span // 2:].mean(axis=1) if span else last_retire
+    converged = np.zeros(B, bool)
+    for p in range(1, max_period + 1):
+        if span >= 3 * p:
+            # require the pattern to repeat three times: the capacity
+            # accumulator can plateau mid-transient, and a 2x match
+            # would mistake that plateau for the steady state
+            match = np.all(
+                (deltas[:, -p:] == deltas[:, -2 * p:-p])
+                & (deltas[:, -p:] == deltas[:, -3 * p:-2 * p]), axis=1)
+            new = match & ~converged
+            if new.any():   # converged at period p: periodic mean
+                cpi = np.where(new, deltas[:, -p:].mean(axis=1), cpi)
+            converged |= match
+
+    results = []
+    for b, prog in enumerate(programs):
+        if not prog.uops:
+            results.append(SimResult(0.0, 0, True, "empty", 0.0, {},
+                                     params))
+            continue
+        fe = len(prog.uops) / params.issue_width
+        results.append(SimResult(
+            cycles_per_iteration=float(cpi[b]),
+            iterations=n_iterations, converged=bool(converged[b]),
+            bottleneck=_classify(float(cpi[b]), fe,
+                                 prog.port_bound_cycles),
+            frontend_cycles=fe, port_busy={}, params=params))
+    return results

@@ -1,0 +1,72 @@
+"""Resource-constrained DAG scheduling — the simulator's TPU analogue.
+
+The x86 simulator ticks cycles; compiled-HLO ops have float durations in
+seconds, so this module schedules them event-style instead: ops are
+processed in definition order (HLO lists definitions before uses), each
+op starts once all of its operands have finished AND its ports are
+free, and each port serializes the work booked on it.  The makespan is
+therefore at least ``max(bound_overlap, critical_path)`` — the analytic
+bound pair of :mod:`repro.core.hlo.analyzer` — and at most the serial
+sum: it refines the analytic estimate exactly where dependency chains
+and port contention interleave.
+
+Used by ``AnalysisService.predict_hlo(mode="simulate")`` and, through
+it, ``ServingEngine.dryrun_estimate``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class DagNode:
+    """One schedulable op: per-port occupation (seconds) + operand deps."""
+
+    name: str
+    occupation: dict[str, float]          # port -> seconds (run in parallel)
+    deps: tuple[str, ...] = ()            # producer names
+
+
+@dataclass
+class DagSchedule:
+    makespan: float
+    finish: dict[str, float] = field(default_factory=dict)
+    port_busy: dict[str, float] = field(default_factory=dict)
+    #                              ^ booked (busy) seconds per port
+
+    @property
+    def bottleneck_port(self) -> str | None:
+        if not self.port_busy:
+            return None
+        return max(self.port_busy, key=lambda p: self.port_busy[p])
+
+
+def schedule_dag(nodes: list[DagNode]) -> DagSchedule:
+    """List-schedule ``nodes`` (definition order) onto capacity-1 ports.
+
+    An op's port occupations run concurrently with each other (a ``dot``
+    uses MXU and HBM at once) but serialize against other ops booked on
+    the same port: each booking starts no earlier than the port's last
+    booking ends (classic in-order list scheduling), so the makespan is
+    at least every per-port busy sum and at least the critical path.
+    """
+    port_cap: dict[str, float] = {}    # end of the last booking
+    port_busy: dict[str, float] = {}   # booked seconds (excludes waits)
+    finish: dict[str, float] = {}
+    makespan = 0.0
+    for node in nodes:
+        ready = 0.0
+        for dep in node.deps:
+            ready = max(ready, finish.get(dep, 0.0))
+        end = ready
+        for port, secs in node.occupation.items():
+            if secs <= 0.0:
+                continue
+            start = max(ready, port_cap.get(port, 0.0))
+            port_cap[port] = start + secs
+            port_busy[port] = port_busy.get(port, 0.0) + secs
+            end = max(end, start + secs)
+        finish[node.name] = end
+        makespan = max(makespan, end)
+    return DagSchedule(makespan=makespan, finish=finish,
+                       port_busy=port_busy)

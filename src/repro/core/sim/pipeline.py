@@ -1,0 +1,431 @@
+"""Cycle-level out-of-order pipeline simulator (the third backend).
+
+The analytic port model (``repro.core.analysis``) assumes a perfectly
+parallel front end and an infinite scheduler window; uiCA (PAPERS.md,
+"Accurate Throughput Prediction of Basic Blocks on Recent Intel
+Microarchitectures") shows those assumptions are exactly where analytic
+predictions diverge from measurement.  This module simulates the missing
+machinery cycle by cycle:
+
+* **front end** — up to ``PipelineParams.issue_width`` uops enter the
+  backend per cycle, strictly in program order; zero-uop instructions
+  (branches in the paper's model, macro-fused compares) consume no slot,
+* **finite windows** — every in-flight uop holds one ROB entry from
+  issue to retirement and one scheduler entry from issue to dispatch;
+  a full window stalls the front end,
+* **dispatch** — per-cycle *oldest-ready-first* port arbitration over
+  the same :class:`~repro.core.ports.Uop` port sets the analytic
+  schedulers use; divider/double-pumped uops occupy their port for
+  ``uop.cycles`` cycles,
+* **wakeup** — a uop becomes ready when every producer instruction has
+  begun execution and its latency (the edge weights of
+  :func:`repro.core.latency.dependency_edges`, including store->load
+  forwarding) has elapsed,
+* **retirement** — up to ``retire_width`` completed uops leave the ROB
+  per cycle, in order.
+
+The simulator runs the loop body repeatedly and reports the steady-state
+cycles per assembly iteration (periodic-delta detection: a steady state
+that alternates, e.g. 4/5 cycles, is reported as its periodic mean 4.5
+rather than never converging).
+
+``simulate()`` is the reference implementation used by
+``AnalysisService`` with ``mode="simulate"``;
+``repro.core.sim.batch`` provides the vectorized struct-of-arrays
+driver for bulk sweeps.  See docs/simulation.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from ..analysis import hidden_instruction_indices
+from ..database import InstructionDB
+from ..isa import Instruction
+from ..latency import dependency_edges
+from ..ports import PipelineParams, PortModel
+
+#: fallback window parameters for models that don't declare any
+DEFAULT_PARAMS = PipelineParams()
+
+
+@dataclass(frozen=True)
+class SimUop:
+    """One micro-op of the compiled loop body.
+
+    ``ports`` may be empty: hidden uops (Zen store/load AGU pairing)
+    execute without a port — they still take an issue slot and a ROB
+    entry, but skip the scheduler.
+    """
+
+    instr_index: int
+    ports: tuple[str, ...]
+    cycles: float = 1.0
+
+
+@dataclass(frozen=True)
+class SimProgram:
+    """A loop body compiled for simulation: struct-of-arrays friendly
+    uop list + per-instruction latencies + dependency edges."""
+
+    model: PortModel
+    n_instructions: int
+    uops: tuple[SimUop, ...]                          # program order
+    latency: tuple[float, ...]                        # per instruction
+    edges: tuple[tuple[int, int, float, bool], ...]   # (src, dst, w, wrap)
+
+    @property
+    def frontend_cycles(self) -> float:
+        """Issue-bandwidth lower bound: uops / issue_width per iteration."""
+        params = self.model.pipeline or DEFAULT_PARAMS
+        return len(self.uops) / params.issue_width
+
+    @property
+    def port_bound_cycles(self) -> float:
+        """Static uniform-scheduler port bound of one iteration (the
+        analytic model's number, recomputed from the compiled uops)."""
+        occ = {p: 0.0 for p in self.model.ports}
+        for u in self.uops:
+            if u.ports:
+                share = u.cycles / len(u.ports)
+                for p in u.ports:
+                    occ[p] += share
+        return max(occ.values(), default=0.0)
+
+
+@dataclass
+class SimResult:
+    """Steady-state simulation outcome for one kernel.
+
+    ``cycles_per_iteration`` is per *assembly* iteration, directly
+    comparable with ``AnalysisResult.port_bound_cycles`` / ``lcd_cycles``.
+    If not even one iteration retired within ``max_cycles``
+    (``iterations == 0``, ``converged=False``), it degrades to the
+    elapsed-cycle lower bound on a single iteration.
+    """
+
+    cycles_per_iteration: float
+    iterations: int                   # loop bodies retired
+    converged: bool
+    bottleneck: str                   # "frontend" | "ports" |
+    #                                   "dependencies" | "empty"
+    frontend_cycles: float            # issue-bandwidth bound per iteration
+    port_busy: dict[str, float] = field(default_factory=dict)
+    #                                 ^ busy cycles per iteration (average)
+    params: PipelineParams = DEFAULT_PARAMS
+
+    def render(self, precision: int = 2) -> str:
+        lines = [f"Simulated: {self.cycles_per_iteration:.{precision}f} "
+                 f"cy/asm-it over {self.iterations} iterations "
+                 f"({'steady state' if self.converged else 'NOT converged'},"
+                 f" bottleneck: {self.bottleneck})",
+                 f"  front end: {self.frontend_cycles:.{precision}f} cy/it "
+                 f"at issue width {self.params.issue_width}, "
+                 f"ROB {self.params.rob_size}, "
+                 f"scheduler {self.params.scheduler_size}"]
+        busy = {p: c for p, c in sorted(self.port_busy.items()) if c > 1e-9}
+        if busy:
+            lines.append("  port busy [cy/it]: " + "  ".join(
+                f"{p}={c:.{precision}f}" for p, c in busy.items()))
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Compilation: kernel -> SimProgram
+# --------------------------------------------------------------------------
+
+def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
+                    lookup: Callable[[Instruction], object] | None = None,
+                    ) -> SimProgram:
+    """Match instruction forms and flatten one loop body into a
+    :class:`SimProgram`.
+
+    Mirrors the matching/hiding steps of
+    :func:`repro.core.analysis.analyze`: unmatched or ignorable
+    instructions contribute no uops (but keep a 1-cycle latency for the
+    dependency edges), and on store-hides-load models the first hideable
+    load per store executes port-less in the store's shadow.
+    """
+    model = db.model
+    if lookup is None:
+        lookup = db.lookup
+    kernel = list(kernel)
+    entries = [lookup(ins) for ins in kernel]
+    hidden_instrs = hidden_instruction_indices(model, entries)
+
+    uops: list[SimUop] = []
+    lat: list[float] = []
+    for idx, e in enumerate(entries):
+        lat.append(e.latency if e is not None else 1.0)
+        if e is None:
+            continue
+        for uop in e.uops:
+            hidden = idx in hidden_instrs and uop.hideable_load
+            uops.append(SimUop(
+                instr_index=idx,
+                ports=() if hidden else tuple(uop.ports),
+                cycles=max(1.0, uop.cycles)))
+
+    edges = tuple(dependency_edges(kernel, db, lookup=lookup))
+    return SimProgram(model=model, n_instructions=len(kernel),
+                      uops=tuple(uops), latency=tuple(lat), edges=edges)
+
+
+# --------------------------------------------------------------------------
+# The cycle loop
+# --------------------------------------------------------------------------
+
+class _Instance:
+    """One dynamic instance of a static instruction (iteration, index)."""
+
+    __slots__ = ("remaining", "exec_start", "ready")
+
+    def __init__(self, n_uops: int):
+        self.remaining = n_uops       # uops not yet dispatched
+        self.exec_start = -1.0        # cycle its last uop dispatched
+        self.ready: float | None = None   # memoized operand-ready cycle
+
+
+def simulate(program: SimProgram,
+             params: PipelineParams | None = None, *,
+             max_iterations: int = 128,
+             warmup_iterations: int = 2,
+             max_period: int = 4,
+             max_cycles: int = 50_000) -> SimResult:
+    """Run ``program`` repeatedly and return the steady-state
+    cycles/iteration.
+
+    Args:
+        program: compiled loop body (see :func:`compile_program`).
+        params: pipeline parameters; defaults to
+            ``program.model.pipeline`` (or :data:`DEFAULT_PARAMS`).
+        max_iterations: iteration cap if no steady state is found.
+        warmup_iterations: iterations excluded from convergence checks
+            (window fill-up transient).
+        max_period: longest periodic cycles/iteration pattern detected
+            (e.g. 2 for an 11/12-cycle alternation).
+        max_cycles: hard safety cap on simulated cycles.
+    """
+    if params is None:
+        params = program.model.pipeline or DEFAULT_PARAMS
+    n_uops = len(program.uops)
+    n_instr = program.n_instructions
+    if n_uops == 0:
+        return SimResult(0.0, 0, True, "empty", 0.0, {}, params)
+
+    uops_per_instr = [0] * n_instr
+    for u in program.uops:
+        uops_per_instr[u.instr_index] += 1
+    in_edges: list[list[tuple[int, float, int]]] = \
+        [[] for _ in range(n_instr)]
+    for src, dst, w, wrap in program.edges:
+        in_edges[dst].append((src, w, 1 if wrap else 0))
+
+    ports = program.model.ports
+    port_free = {p: 0.0 for p in ports}     # cycle the port frees up
+    port_busy_total = {p: 0.0 for p in ports}
+    dispatch_count = 0                      # port uops dispatched so far
+    n_port_uops = sum(1 for u in program.uops if u.ports)
+    # (port busy totals, dispatch count) at each iteration-retire boundary
+    busy_snapshots: list[tuple[dict[str, float], int]] = []
+
+    instances: dict[tuple[int, int], _Instance] = {}
+
+    def instance(it: int, idx: int) -> _Instance:
+        key = (it, idx)
+        inst = instances.get(key)
+        if inst is None:
+            inst = instances[key] = _Instance(uops_per_instr[idx])
+        return inst
+
+    def exec_start_of(it: int, idx: int) -> float | None:
+        """Cycle instance (it, idx) began executing; None if unknown yet.
+        Zero-uop instructions (branches, unmatched forms) never occupy a
+        port — they "execute" the moment their own operands are ready."""
+        if uops_per_instr[idx] == 0:
+            return ready_cycle(it, idx)
+        inst = instance(it, idx)
+        if inst.remaining > 0 or inst.exec_start < 0:
+            return None
+        return inst.exec_start
+
+    def ready_cycle(it: int, idx: int) -> float | None:
+        """Operand-ready cycle of instance (it, idx); None while some
+        producer has not started executing."""
+        inst = instance(it, idx)
+        if inst.ready is not None:
+            return inst.ready
+        t_ready = 0.0
+        for src, w, wrap in in_edges[idx]:
+            pit = it - wrap
+            if pit < 0:
+                continue          # before the first iteration: no producer
+            start = exec_start_of(pit, src)
+            if start is None:
+                return None
+            t_ready = max(t_ready, start + w)
+        inst.ready = t_ready
+        return t_ready
+
+    scheduler: list[int] = []     # global uop ids, in issue order
+    # ROB entries are allocated at issue, in program order, and indexed
+    # by global uop id; the value is the completion cycle (None while
+    # the uop waits in the scheduler or executes).
+    completion: list[float | None] = []
+    rob_head = 0                  # uops retired so far
+
+    next_global = 0               # next uop of the infinite stream
+    target_uops = max_iterations * n_uops
+    iter_end: list[float] = []    # retire cycle of each iteration's last uop
+
+    t = 0
+    result_cpi = 0.0
+    converged = False
+    last_progress = 0
+    while t < max_cycles:
+        progressed = False
+
+        # ---- retire (frees ROB entries, in program order) ------------
+        retired = 0
+        while rob_head < next_global and retired < params.retire_width:
+            done = completion[rob_head]
+            if done is None or done > t:
+                break
+            rob_head += 1
+            retired += 1
+            if rob_head % n_uops == 0:    # an iteration fully retired
+                iter_end.append(float(t))
+                busy_snapshots.append((dict(port_busy_total),
+                                       dispatch_count))
+        if retired:
+            progressed = True
+
+        # ---- periodic steady-state detection -------------------------
+        if retired and len(iter_end) >= warmup_iterations + 2:
+            deltas = [iter_end[k] - iter_end[k - 1]
+                      for k in range(warmup_iterations + 1, len(iter_end))]
+            for p in range(1, max_period + 1):
+                if len(deltas) >= 2 * p and \
+                        deltas[-p:] == deltas[-2 * p:-p]:
+                    result_cpi = sum(deltas[-p:]) / p
+                    converged = True
+                    break
+            if converged:
+                break
+
+        # ---- dispatch: per-port oldest-ready-first arbitration -------
+        if scheduler:
+            dispatched: set[int] = set()
+            for port in ports:
+                if port_free[port] > t:
+                    continue
+                for si, g in enumerate(scheduler):
+                    if g in dispatched:
+                        continue
+                    it, local = divmod(g, n_uops)
+                    uop = program.uops[local]
+                    if port not in uop.ports:
+                        continue
+                    r = ready_cycle(it, uop.instr_index)
+                    if r is None or r > t:
+                        continue
+                    # scheduler is issue-ordered: first match = oldest
+                    dispatched.add(g)
+                    port_free[port] = t + uop.cycles
+                    port_busy_total[port] += uop.cycles
+                    inst = instance(it, uop.instr_index)
+                    inst.remaining -= 1
+                    inst.exec_start = max(inst.exec_start, float(t))
+                    completion[g] = t + max(
+                        1.0, program.latency[uop.instr_index])
+                    break
+            if dispatched:
+                scheduler = [g for g in scheduler if g not in dispatched]
+                dispatch_count += len(dispatched)
+                progressed = True
+
+        # ---- issue (in order, bounded by width/ROB/scheduler) --------
+        issued = 0
+        while issued < params.issue_width and next_global < target_uops:
+            it, local = divmod(next_global, n_uops)
+            uop = program.uops[local]
+            if (next_global - rob_head) >= params.rob_size:
+                break
+            if uop.ports and len(scheduler) >= params.scheduler_size:
+                break
+            if uop.ports:
+                completion.append(None)
+                scheduler.append(next_global)
+            else:
+                # port-less uop (hidden load): executes in another uop's
+                # shadow, completing off its instruction's latency
+                inst = instance(it, uop.instr_index)
+                inst.remaining -= 1
+                inst.exec_start = max(inst.exec_start, float(t))
+                completion.append(
+                    t + max(1.0, program.latency[uop.instr_index]))
+            next_global += 1
+            issued += 1
+        if issued:
+            progressed = True
+
+        # ---- termination guards --------------------------------------
+        if next_global >= target_uops and rob_head >= next_global:
+            break                 # stream fully retired, no steady state
+        if progressed:
+            last_progress = t
+        elif t - last_progress > 1024:
+            break                 # deadlock guard (should not happen)
+        t += 1
+
+    if not converged:
+        # fall back to the average slope over the simulated tail
+        if len(iter_end) >= warmup_iterations + 2:
+            a, b = warmup_iterations, len(iter_end) - 1
+            result_cpi = (iter_end[b] - iter_end[a]) / (b - a)
+        else:
+            result_cpi = float(t) / max(1, len(iter_end))
+
+    # steady-state port busy: dispatch-rate delta between the warmup
+    # iteration boundary and the last one, normalised by how many
+    # iterations' worth of uops were actually *dispatched* in that
+    # window (the front end runs ahead of retirement, so counting
+    # retired iterations would inflate the rates)
+    if len(busy_snapshots) > warmup_iterations + 1 and n_port_uops:
+        (first, d0) = busy_snapshots[warmup_iterations]
+        (last, d1) = busy_snapshots[-1]
+        span = max(1e-9, (d1 - d0) / n_port_uops)
+        port_busy = {p: (last[p] - first[p]) / span for p in ports}
+    else:
+        port_busy = {p: c / max(1, len(iter_end))
+                     for p, c in port_busy_total.items()}
+    frontend = n_uops / params.issue_width
+    return SimResult(
+        cycles_per_iteration=result_cpi,
+        iterations=len(iter_end), converged=converged,
+        bottleneck=_classify(result_cpi, frontend,
+                             program.port_bound_cycles),
+        frontend_cycles=frontend, port_busy=port_busy, params=params)
+
+
+def _classify(cpi: float, frontend: float, port_bound: float) -> str:
+    """Name the binding constraint of a steady state: issue bandwidth
+    saturated ("frontend"), the static port requirement reached
+    ("ports"), or neither resource explains the pace — the wakeup chain
+    and finite windows do ("dependencies")."""
+    if cpi <= 0:
+        return "empty"
+    if cpi <= frontend * 1.02 + 0.51:
+        return "frontend"
+    if cpi <= port_bound * 1.05 + 0.51:
+        return "ports"
+    return "dependencies"
+
+
+def simulate_kernel(kernel: Sequence[Instruction], db: InstructionDB,
+                    params: PipelineParams | None = None,
+                    lookup: Callable[[Instruction], object] | None = None,
+                    **kwargs) -> SimResult:
+    """Convenience: :func:`compile_program` + :func:`simulate`."""
+    return simulate(compile_program(kernel, db, lookup=lookup),
+                    params=params, **kwargs)

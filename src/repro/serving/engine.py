@@ -90,7 +90,7 @@ class ServingEngine:
 
     # ------------------------------------------------------------ #
     def dryrun_estimate(self, prompt_len: int = 128,
-                        service=None) -> dict:
+                        service=None, mode: str = "analytic") -> dict:
         """Static port-model latency estimate of this engine's serving
         path — no execution, just lower/compile + the unified analysis.
 
@@ -98,10 +98,13 @@ class ServingEngine:
         runs them through :meth:`AnalysisService.predict_hlo`, so the
         returned times use the combined ``max(overlap, critical-path)``
         bound (the same rule the x86 engine applies as
-        ``max(port_bound, LCD)``).  Returns per-phase ``HloAnalysis``
-        objects plus scalar summaries::
+        ``max(port_bound, LCD)``).  With ``mode="simulate"`` the entry
+        ops are additionally list-scheduled onto the TPU ports
+        (``repro.core.sim.dag``) and the scalar summaries use that
+        refined ``terms.bound_sim`` makespan.  Returns per-phase
+        ``HloAnalysis`` objects plus scalar summaries::
 
-            {"prefill": HloAnalysis, "decode": HloAnalysis,
+            {"prefill": HloAnalysis, "decode": HloAnalysis, "mode": ...,
              "prefill_s": ..., "decode_s_per_token": ...,
              "tokens_per_s_per_slot": ...}
         """
@@ -117,12 +120,15 @@ class ServingEngine:
         decode_txt = self._decode.lower(
             self.params, tok, jnp.int32(prompt_len),
             cache).compile().as_text()
-        prefill = service.predict_hlo(prefill_txt)
-        decode = service.predict_hlo(decode_txt)
-        decode_s = decode.terms.bound_combined
+        prefill = service.predict_hlo(prefill_txt, mode=mode)
+        decode = service.predict_hlo(decode_txt, mode=mode)
+        prefill_s = prefill.terms.bound_sim if mode == "simulate" \
+            else prefill.terms.bound_combined
+        decode_s = decode.terms.bound_sim if mode == "simulate" \
+            else decode.terms.bound_combined
         return {
-            "prefill": prefill, "decode": decode,
-            "prefill_s": prefill.terms.bound_combined,
+            "prefill": prefill, "decode": decode, "mode": mode,
+            "prefill_s": prefill_s,
             "decode_s_per_token": decode_s,
             "tokens_per_s_per_slot": (1.0 / decode_s) if decode_s else
             float("inf"),

@@ -1,6 +1,14 @@
 #!/usr/bin/env python3
-"""Docs link check: every relative markdown link in README.md and docs/
-must resolve to an existing file or directory.
+"""Docs link check.
+
+Three passes over README.md and docs/:
+
+1. every relative markdown link must resolve to an existing file or
+   directory,
+2. every anchor fragment (``#section`` — intra-document or
+   ``file.md#section``) must match a heading slug in the target file,
+3. every page under docs/ must be reachable from README.md by following
+   relative markdown links (no orphan pages).
 
 Used by CI (.github/workflows/ci.yml); run locally with:
 
@@ -15,6 +23,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 # [text](target) — excluding images handled identically, code spans ignored
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 
@@ -24,34 +33,103 @@ def iter_md_files() -> list[Path]:
     return [f for f in files if f.exists()]
 
 
-def check_file(path: Path) -> list[str]:
-    errors = []
-    text = path.read_text(encoding="utf-8")
-    # drop fenced code blocks: asm/py snippets contain `(...)` operands
-    text = re.sub(r"```.*?```", "", text, flags=re.S)
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks: asm/py snippets contain `(...)` operands."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def heading_anchors(path: Path) -> set[str]:
+    """GitHub-style anchor slugs of every heading in ``path``."""
+    anchors: set[str] = set()
+    for line in _strip_code(path.read_text(encoding="utf-8")).splitlines():
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        title = re.sub(r"`([^`]*)`", r"\1", m.group(2))   # drop code spans
+        title = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", title)  # links
+        slug = title.strip().lower()
+        slug = re.sub(r"[^\w\- ]", "", slug).replace(" ", "-")
+        base, n = slug, 1
+        while slug in anchors:                 # duplicate headings: -1, -2
+            slug = f"{base}-{n}"
+            n += 1
+        anchors.add(slug)
+    return anchors
+
+
+_links_cache: dict[Path, list[tuple[str, Path, str]]] = {}
+
+
+def iter_links(path: Path) -> list[tuple[str, Path, str]]:
+    """(target, resolved_path, fragment) per relative link; parsed once
+    per file (check_file and the orphan BFS both walk the same pages)."""
+    cached = _links_cache.get(path)
+    if cached is not None:
+        return cached
+    text = _strip_code(path.read_text(encoding="utf-8"))
+    links = []
     for m in _LINK_RE.finditer(text):
         target = m.group(1)
         if target.startswith(_EXTERNAL):
             continue
-        if target.startswith("#"):  # intra-document anchor
-            continue
-        rel = target.split("#", 1)[0]
-        resolved = (path.parent / rel).resolve()
+        rel, _, fragment = target.partition("#")
+        resolved = (path.parent / rel).resolve() if rel else path.resolve()
+        links.append((target, resolved, fragment))
+    _links_cache[path] = links
+    return links
+
+
+def check_file(path: Path, anchor_cache: dict[Path, set[str]]) -> list[str]:
+    errors = []
+    rel_path = path.relative_to(ROOT)
+    for target, resolved, fragment in iter_links(path):
         if not resolved.exists():
-            errors.append(f"{path.relative_to(ROOT)}: broken link "
-                          f"-> {target}")
+            errors.append(f"{rel_path}: broken link -> {target}")
+            continue
+        if not fragment or resolved.suffix != ".md":
+            continue
+        if resolved not in anchor_cache:
+            anchor_cache[resolved] = heading_anchors(resolved)
+        # exact match: GitHub anchor ids are lowercase and fragment
+        # matching is case-sensitive, so #Section is broken even when
+        # #section exists
+        if fragment not in anchor_cache[resolved]:
+            errors.append(f"{rel_path}: broken anchor -> {target} "
+                          f"(no heading for #{fragment})")
     return errors
+
+
+def find_orphans(files: list[Path]) -> list[str]:
+    """docs/*.md pages not reachable from README.md via relative links."""
+    start = ROOT / "README.md"
+    reachable: set[Path] = set()
+    stack = [start.resolve()]
+    while stack:
+        page = stack.pop()
+        if page in reachable or not page.exists():
+            continue
+        reachable.add(page)
+        if page.suffix != ".md":
+            continue
+        for _, resolved, _ in iter_links(page):
+            if resolved not in reachable:
+                stack.append(resolved)
+    return [f"{f.relative_to(ROOT)}: orphan page (not reachable from "
+            f"README.md)" for f in files
+            if f.resolve() not in reachable]
 
 
 def main() -> int:
     errors: list[str] = []
     files = iter_md_files()
+    anchor_cache: dict[Path, set[str]] = {}
     for f in files:
-        errors.extend(check_file(f))
+        errors.extend(check_file(f, anchor_cache))
+    errors.extend(find_orphans(files))
     for e in errors:
         print(e, file=sys.stderr)
-    print(f"checked {len(files)} markdown files: "
-          f"{'FAIL' if errors else 'ok'}")
+    print(f"checked {len(files)} markdown files (links, anchors, "
+          f"orphans): {'FAIL' if errors else 'ok'}")
     return 1 if errors else 0
 
 
