@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core.bench import (conflict_benchmark, infer_port_count,
                               sweep_parallelism)
-from repro.core.bench.model_builder import build_host_model
+from repro.core.bench.model_builder import build_host_machine
 
 FREQ = 2.0e9   # nominal; cycles reported are indicative on shared CPU
 
@@ -54,7 +54,10 @@ def conflict_probe() -> list[dict]:
 
 
 def host_model() -> list[dict]:
-    model, db, measured = build_host_model()
+    """Measured host machine as a MachineModel artifact: per-form rows
+    plus the serialized model's digest (models are data — the measured
+    machine ships like any hand-written one)."""
+    machine, measured = build_host_machine()
     rows = []
     for m in measured:
         rows.append({
@@ -63,4 +66,8 @@ def host_model() -> list[dict]:
             "latency_us": m.latency_s * 1e6,
             "ports": m.ports,
         })
+    rows.append({"name": "host_model/artifact",
+                 "ports": len(machine.ports),
+                 "forms": len(machine.forms),
+                 "digest": machine.digest[:16]})
     return rows

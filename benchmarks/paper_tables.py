@@ -1,10 +1,12 @@
 """Reproductions of the paper's Tables I-VII: OSACA predictions from our
 engine vs the paper's published OSACA/IACA/measured numbers, plus the
-cycle-level simulator comparison column (``simulator_table``).
+cycle-level simulator comparison column (``simulator_table``) and the
+machine-model registry guard (``registry_guard``).
 
-All cells are served by one shared :class:`AnalysisService`, so DB
-construction, form lookups, repeated kernel analyses and pipeline
-simulations are memoized across the whole table sweep."""
+All cells are served by one shared :class:`AnalysisService`; archs
+resolve through the architecture registry, so DB construction, form
+lookups, repeated kernel analyses and pipeline simulations are memoized
+across the whole table sweep."""
 from __future__ import annotations
 
 from repro.core import AnalysisRequest, default_service
@@ -169,9 +171,50 @@ def simulator_table() -> list[dict]:
     return rows
 
 
+def registry_guard() -> list[dict]:
+    """Machine-model registry guard: every paper-kernel prediction must
+    be reproduced *bit-for-bit* by a model that took the full data round
+    trip — registry build -> ``to_json`` -> ``from_json`` ->
+    ``register`` on a fresh service (headline check: pi -O1 at 9.0
+    cy/it on SKL, 11.5 on Zen).  This is what makes models safe to ship
+    to workers / cache by digest: the serialized artifact *is* the
+    model."""
+    from repro.core import AnalysisService, MachineModel, get_model
+
+    svc = AnalysisService()
+    rows = []
+    for arch, expected_pi_o1 in (("skl", 9.0), ("zen", 11.5)):
+        clone = MachineModel.from_json(get_model(arch).to_json())
+        guard_id = f"{arch}-roundtrip"
+        svc.register(clone.derive(guard_id))
+        exact = True
+        for (karch, flag), src in pk.PI_KERNELS.items():
+            if karch != arch:
+                continue
+            unroll = pk.TABLE5[(arch, flag)][0]
+            ref = SERVICE.predict(AnalysisRequest(
+                kernel=src, arch=arch, unroll_factor=unroll))
+            got = svc.predict(AnalysisRequest(
+                kernel=src, arch=guard_id, unroll_factor=unroll))
+            exact &= (got.predicted_cycles == ref.predicted_cycles
+                      and got.port_bound_cycles == ref.port_bound_cycles
+                      and got.lcd_cycles == ref.lcd_cycles
+                      and got.port_totals == ref.port_totals)
+        pi = svc.predict(AnalysisRequest(kernel=pk.PI_O1, arch=guard_id))
+        rows.append({
+            "name": f"registry/pi_O1_{arch}_roundtrip",
+            "pred_cy_it": pi.cycles_per_source_iteration,
+            "paper_cy_it": expected_pi_o1,
+            "digest": get_model(arch).digest[:16],
+            "match": exact and abs(pi.cycles_per_source_iteration
+                                   - expected_pi_o1) < 1e-9,
+        })
+    return rows
+
+
 ALL_TABLES = {
     "table1": table1, "table2": table2, "table3": table3,
     "table4": table4, "table5": table5, "table6": table6,
     "table7": table7, "fma_example": fma_model_construction,
-    "simulator": simulator_table,
+    "simulator": simulator_table, "registry": registry_guard,
 }

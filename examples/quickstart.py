@@ -42,6 +42,18 @@ def main():
           f"{res_pi.predicted_cycles:.2f} ({res_pi.binding}-bound; "
           f"measured 9.02)")
 
+    # -- 1b. machine models are data ------------------------------------
+    print()
+    print("Machine models are declarative artifacts (ISSUE 3): every")
+    print("arch resolves through the registry and serializes to JSON —")
+    from repro.core import get_model
+    skl = get_model("skl")
+    print(f"  skl: {len(skl.forms)} instruction forms, "
+          f"{len(skl.ports)} ports, digest {skl.digest[:16]}")
+    print(f"  shipped variants resolve too: clx = "
+          f"{get_model('cascadelake').name!r} "
+          f"(a derive() of skl in arch/models/cascadelake.json)")
+
     # -- 2. train a reduced model --------------------------------------
     print()
     print("=" * 72)

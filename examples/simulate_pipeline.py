@@ -48,8 +48,9 @@ def main():
     print("=" * 76)
     print("Vectorized batch driver: the same sweep in one SoA pass")
     print("=" * 76)
-    programs = [compile_program(extract_kernel(src),
-                                svc.database(arch))
+    # compile_program accepts an arch id directly: it resolves through
+    # the architecture registry (cached MachineModel -> InstructionDB)
+    programs = [compile_program(extract_kernel(src), arch)
                 for arch, src, _ in CASES.values()]
     for name, sim in zip(CASES, simulate_many(programs)):
         print(f"{name:16s} {sim.cycles_per_iteration:6.2f} cy/it  "

@@ -4,20 +4,25 @@ compiled JAX/HLO programs on TPU (adaptation layer, see repro.core.hlo)."""
 from __future__ import annotations
 
 from .analysis import AnalysisResult, analyze
+from .arch.registry import (ArchRegistry, UnknownArchError,
+                            default_registry, get_model)
 from .database import E, InstrForm, InstructionDB, widen_double_pumped
 from .engine import AnalysisRequest, AnalysisService, default_service
 from .isa import Instruction, parse_assembly
 from .kernel import extract_kernel
 from .latency import LatencyResult, analyze_latency, dependency_edges
+from .machine import BenchRecord, MachineModel, as_database
 from .ports import PipelineParams, PortModel, U, Uop
 from .sim import (SimProgram, SimResult, compile_program, simulate,
                   simulate_kernel, simulate_many)
 
 __all__ = [
     "AnalysisRequest", "AnalysisResult", "AnalysisService", "analyze",
-    "analyze_latency", "default_service", "dependency_edges",
-    "extract_kernel", "parse_assembly", "Instruction", "InstructionDB",
-    "InstrForm", "E", "LatencyResult", "PipelineParams", "PortModel",
-    "SimProgram", "SimResult", "U", "Uop", "compile_program", "simulate",
+    "analyze_latency", "ArchRegistry", "as_database", "BenchRecord",
+    "default_registry", "default_service", "dependency_edges",
+    "extract_kernel", "get_model", "parse_assembly", "Instruction",
+    "InstructionDB", "InstrForm", "E", "LatencyResult", "MachineModel",
+    "PipelineParams", "PortModel", "SimProgram", "SimResult", "U",
+    "UnknownArchError", "Uop", "compile_program", "simulate",
     "simulate_kernel", "simulate_many", "widen_double_pumped",
 ]

@@ -21,6 +21,7 @@ from typing import Callable
 from .database import InstructionDB, MissingForm
 from .isa import Instruction
 from .latency import LatencyResult, analyze_latency
+from .machine import as_database
 from .ports import PortModel, merge_occupation
 from .scheduler import SCHEDULERS, ScheduledUop
 
@@ -191,7 +192,9 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
     Args:
         kernel: instructions of one assembly loop iteration (see
             :func:`repro.core.kernel.extract_kernel`).
-        db: per-architecture instruction-form database.
+        db: the machine to analyze on — an instruction-form database, a
+            :class:`~repro.core.machine.MachineModel`, or an arch
+            id/alias resolved through the default registry.
         scheduler: ``"uniform"`` (paper assumption 2) or ``"balanced"``
             (IACA-like min-max LP).
         unroll_factor: assembly-iterations per source iteration; only
@@ -206,6 +209,7 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
             memoizing wrapper around the balanced-scheduler LP here.
         lookup: override for ``db.lookup`` (memoized by the service).
     """
+    db = as_database(db)
     model = db.model
     if schedule_fn is None:
         schedule_fn = SCHEDULERS[scheduler]

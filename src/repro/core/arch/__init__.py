@@ -1,28 +1,48 @@
-"""Per-architecture port models and instruction databases."""
+"""Per-architecture machine models, instruction databases and the
+registry that resolves them.
+
+The declarative spec lives in :mod:`repro.core.machine`
+(:class:`MachineModel`); this package holds the hand-written built-in
+models (``skylake``, ``zen``, ``tpu_v5e``), the JSON model artifacts
+shipped under ``models/*.json``, and the
+:class:`~repro.core.arch.registry.ArchRegistry` front end
+(:func:`default_registry`, :func:`get_model`).
+
+``canonical_arch`` and ``get_db`` are kept as thin registry shims for
+older callers; new code should use the registry (or simply pass an arch
+id / :class:`MachineModel` to any analysis entry point — see
+``repro.core.machine.as_database``).
+"""
 from __future__ import annotations
 
-from .skylake import build_skylake_db, SKYLAKE
-from .zen import build_zen_db, ZEN
+from ..machine import MachineModel
+from .registry import (ArchRegistry, UnknownArchError, default_registry,
+                       get_model)
+from .skylake import SKYLAKE, build_skylake_db, build_skylake_model
+from .tpu_v5e import TPU_V5E, build_tpu_v5e_model
+from .zen import ZEN, build_zen_db, build_zen_model
 
-
-# alias -> canonical id; shared by get_db and the AnalysisService caches
-_ALIASES = {"skl": "skl", "skylake": "skl",
-            "zen": "zen", "zen1": "zen", "znver1": "zen"}
+__all__ = [
+    "ArchRegistry", "MachineModel", "SKYLAKE", "TPU_V5E",
+    "UnknownArchError", "ZEN", "build_skylake_db", "build_skylake_model",
+    "build_tpu_v5e_model", "build_zen_db", "build_zen_model",
+    "canonical_arch", "default_registry", "get_db", "get_model",
+]
 
 
 def canonical_arch(arch: str) -> str:
-    """Canonical architecture id: aliases collapse ("skylake" -> "skl",
-    "znver1" -> "zen"); unknown names pass through lowercased (they may
-    be custom AnalysisService registrations)."""
-    a = arch.lower()
-    return _ALIASES.get(a, a)
+    """Canonical architecture id: ``"skylake" -> "skl"``,
+    ``"znver1" -> "zen"``.  Registry shim — unlike the pre-registry
+    version this no longer passes unknown names through silently; it
+    raises :class:`UnknownArchError` listing every registered id and
+    alias."""
+    return default_registry().resolve(arch)
 
 
 def get_db(arch: str):
-    arch = canonical_arch(arch)
-    if arch == "skl":
-        return build_skylake_db()
-    if arch == "zen":
-        return build_zen_db()
-    raise ValueError(f"unknown architecture {arch!r} "
-                     "(TPU analysis lives in repro.core.hlo.analyzer)")
+    """The (registry-cached) :class:`InstructionDB` for ``arch``.
+
+    Registry shim: the database is now built once per process instead
+    of on every call, and unknown names raise one consistent
+    :class:`UnknownArchError`."""
+    return default_registry().database(arch)

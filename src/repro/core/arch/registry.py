@@ -1,0 +1,338 @@
+"""Architecture registry: one resolution path for every machine model.
+
+Replaces the old trio of ``arch._ALIASES`` / ``arch.canonical_arch`` /
+``arch.get_db`` (an if/elif that rebuilt the whole database on every
+call) with a single :class:`ArchRegistry`:
+
+* **lazy builders** — ``register_lazy("skl", builder, aliases=...)``
+  records identity without paying for the form table; the
+  :class:`~repro.core.machine.MachineModel` is built on first use,
+* **alias resolution** — ``resolve("znver1") -> "zen"``; unknown names
+  raise one consistent :class:`UnknownArchError` listing every
+  registered id and alias (the old ``canonical_arch`` silently passed
+  unknown names through while ``get_db`` raised a stale message),
+* **database caching** — ``database("skl")`` builds the
+  ``InstructionDB`` once per registry; benchmarks that bypass
+  ``AnalysisService`` no longer pay the full build repeatedly,
+* **model files** — :meth:`ArchRegistry.load_file` /
+  :meth:`~ArchRegistry.discover` register the JSON artifacts shipped
+  under ``src/repro/core/arch/models/*.json`` (full models or
+  ``base``+``overrides`` derivations — models are data),
+* **layering** — a registry may have a ``parent``; lookups fall back to
+  it, and local registrations shadow it.  ``AnalysisService`` gives
+  every service instance a private child of the process-wide
+  :func:`default_registry`, so runtime ``register()`` calls never leak
+  across services.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+from typing import Callable, Sequence
+
+from ..database import InstructionDB
+from ..machine import SCHEMA, MachineModel
+
+#: directory of the JSON model artifacts shipped with the package
+MODELS_DIR = Path(__file__).resolve().parent / "models"
+
+Builder = Callable[[], MachineModel]
+
+
+class UnknownArchError(ValueError, KeyError):
+    """Raised for an architecture name no registry layer knows.
+
+    Subclasses both ``ValueError`` (what the old ``get_db`` raised) and
+    ``KeyError`` so existing handlers keep working.  The message lists
+    every registered id and alias.
+    """
+
+    def __init__(self, name: str, ids: Sequence[str],
+                 aliases: dict[str, str]):
+        self.name = name
+        alias_part = ", ".join(f"{a!r}->{c!r}"
+                               for a, c in sorted(aliases.items()))
+        msg = (f"unknown architecture {name!r}; registered ids: "
+               f"{sorted(ids)}"
+               + (f"; aliases: {alias_part}" if aliases else ""))
+        ValueError.__init__(self, msg)
+
+    def __str__(self) -> str:  # KeyError would repr() the args tuple
+        return self.args[0]
+
+
+class ArchRegistry:
+    """Thread-safe id/alias resolution + model and database caching."""
+
+    def __init__(self, parent: "ArchRegistry | None" = None):
+        self._lock = threading.RLock()
+        self._parent = parent
+        self._builders: dict[str, Builder] = {}
+        self._models: dict[str, MachineModel] = {}
+        self._aliases: dict[str, str] = {}
+        self._dbs: dict[str, InstructionDB] = {}
+
+    # ------------------------------------------------------------------
+    # registration
+    # ------------------------------------------------------------------
+    def register(self, model: MachineModel, *,
+                 aliases: Sequence[str] | None = None,
+                 replace: bool = False) -> str:
+        """Register a built model under ``model.arch_id``.
+
+        ``aliases`` defaults to ``model.aliases``; ``replace=True``
+        allows re-registration (shadowing a parent entry or replacing a
+        local one) and drops the cached database for the id."""
+        arch_id = model.arch_id
+        self.register_lazy(
+            arch_id, lambda: model,
+            aliases=model.aliases if aliases is None else aliases,
+            replace=replace)
+        with self._lock:
+            self._models[arch_id] = model
+        return arch_id
+
+    def register_lazy(self, arch_id: str, builder: Builder, *,
+                      aliases: Sequence[str] = (),
+                      replace: bool = False) -> str:
+        """Register a model *builder* called on first use — identity
+        (id + aliases) is recorded now, the form table is not built."""
+        arch_id = arch_id.lower()
+        aliases = tuple(a.lower() for a in aliases)
+        with self._lock:
+            if not replace:
+                clash = [n for n in (arch_id, *aliases)
+                         if self._known(n, ignore_id=None)]
+                if clash:
+                    raise ValueError(
+                        f"architecture name(s) {clash} already "
+                        f"registered (pass replace=True to shadow)")
+            # drop aliases previously pointing at this id, then re-add
+            for a in [a for a, c in self._aliases.items() if c == arch_id]:
+                del self._aliases[a]
+            self._builders[arch_id] = builder
+            self._models.pop(arch_id, None)
+            self._dbs.pop(arch_id, None)
+            for a in aliases:
+                if a != arch_id:
+                    self._aliases[a] = arch_id
+        return arch_id
+
+    def _known(self, name: str, ignore_id: str | None) -> bool:
+        if name in self._builders or name in self._aliases:
+            return True
+        if self._parent is not None:
+            return self._parent._known(name, ignore_id)
+        return False
+
+    def prime_database(self, arch_id: str, db: InstructionDB) -> None:
+        """Seed the database cache for a registered id (used by the
+        ``register_db`` migration shim to preserve object identity)."""
+        arch_id = self.resolve(arch_id)
+        with self._lock:
+            self._dbs[arch_id] = db
+
+    # ------------------------------------------------------------------
+    # resolution
+    # ------------------------------------------------------------------
+    def resolve(self, name: str) -> str:
+        """Canonical architecture id for ``name`` (id or alias, case-
+        insensitive); raises :class:`UnknownArchError` otherwise."""
+        key = name.lower()
+        reg: ArchRegistry | None = self
+        while reg is not None:
+            with reg._lock:
+                if key in reg._builders:
+                    return key
+                if key in reg._aliases:
+                    return reg._aliases[key]
+            reg = reg._parent
+        raise UnknownArchError(name, self.ids(), self.alias_map())
+
+    def __contains__(self, name: str) -> bool:
+        try:
+            self.resolve(name)
+            return True
+        except UnknownArchError:
+            return False
+
+    def ids(self) -> list[str]:
+        """All registered canonical ids (parent layers included)."""
+        out = dict.fromkeys(self._parent.ids()) if self._parent else {}
+        with self._lock:
+            out.update(dict.fromkeys(self._builders))
+        return list(out)
+
+    def alias_map(self) -> dict[str, str]:
+        """alias -> canonical id over all layers (local shadows parent)."""
+        out = self._parent.alias_map() if self._parent else {}
+        with self._lock:
+            out.update(self._aliases)
+        return out
+
+    # ------------------------------------------------------------------
+    # model / database access
+    # ------------------------------------------------------------------
+    def model(self, name: str) -> MachineModel:
+        """The (cached) :class:`MachineModel`, building lazily."""
+        arch_id = self.resolve(name)
+        reg: ArchRegistry | None = self
+        while reg is not None:
+            with reg._lock:
+                hit = reg._models.get(arch_id)
+                if hit is not None:
+                    return hit
+                builder = reg._builders.get(arch_id)
+            if builder is not None:
+                model = builder()
+                if model.arch_id != arch_id:
+                    raise ValueError(
+                        f"builder for {arch_id!r} returned a model with "
+                        f"arch_id {model.arch_id!r}")
+                with reg._lock:
+                    model = reg._models.setdefault(arch_id, model)
+                return model
+            reg = reg._parent
+        raise UnknownArchError(name, self.ids(), self.alias_map())
+
+    def database(self, name: str) -> InstructionDB:
+        """The (cached) :class:`InstructionDB` for ``name`` — built at
+        most once per registry layer and shared by every caller.
+
+        Raises ``ValueError`` for a model without an instruction-form
+        table (e.g. ``"tpu_v5e"``): instruction-stream analysis on it
+        would silently match nothing; accelerator/HLO analysis lives in
+        ``repro.core.hlo.analyzer`` / ``AnalysisService.predict_hlo``."""
+        arch_id = self.resolve(name)
+        # serve from the layer that owns the id so a local registration
+        # shadows the parent's cache (and vice versa stays shared)
+        reg: ArchRegistry | None = self
+        while reg is not None:
+            with reg._lock:
+                owns = arch_id in reg._builders or arch_id in reg._models
+                hit = reg._dbs.get(arch_id)
+            if hit is not None:
+                return hit
+            if owns:
+                model = reg.model(arch_id)
+                if not model.forms:
+                    raise ValueError(
+                        f"architecture {arch_id!r} has no instruction-"
+                        f"form table — it cannot serve instruction-"
+                        f"stream analysis (accelerator/HLO analysis "
+                        f"lives in repro.core.hlo.analyzer / "
+                        f"AnalysisService.predict_hlo)")
+                db = model.database()
+                with reg._lock:
+                    db = reg._dbs.setdefault(arch_id, db)
+                return db
+            reg = reg._parent
+        raise UnknownArchError(name, self.ids(), self.alias_map())
+
+    # ------------------------------------------------------------------
+    # model files
+    # ------------------------------------------------------------------
+    def load_file(self, path: str | Path, *,
+                  replace: bool = False) -> str:
+        """Register one JSON model file; returns the registered id.
+
+        Two layouts are accepted (``tools/check_models.py`` validates
+        both for every shipped file):
+
+        * full model: ``{"schema": ..., "model": {<to_dict() output>}}``
+          (or the ``to_dict()`` output directly at top level),
+        * derivation: ``{"schema": ..., "base": "skl", "overrides":
+          {"arch_id": "clx", ...}}`` — resolved against this registry
+          and applied via :meth:`MachineModel.derive` on first use.
+        """
+        path = Path(path)
+        data = json.loads(path.read_text(encoding="utf-8"))
+        schema = data.get("schema", SCHEMA)
+        if schema != SCHEMA:
+            raise ValueError(f"{path}: unsupported schema {schema!r}")
+        if "base" in data:
+            overrides = dict(data.get("overrides", {}))
+            try:
+                arch_id = overrides.pop("arch_id")
+            except KeyError:
+                raise ValueError(
+                    f"{path}: derived model needs overrides.arch_id")
+            base = data["base"]
+            aliases = tuple(overrides.get("aliases", ()))
+            return self.register_lazy(
+                arch_id,
+                lambda: self.model(base).derive(arch_id, **overrides),
+                aliases=aliases, replace=replace)
+        payload = data.get("model", data)
+        model = MachineModel.from_dict(payload)
+        return self.register(model, replace=replace)
+
+    def discover(self, directory: str | Path | None = None,
+                 *, replace: bool = False) -> list[str]:
+        """Register every ``*.json`` model file in ``directory``
+        (default: the shipped :data:`MODELS_DIR`), sorted by name."""
+        directory = Path(directory) if directory else MODELS_DIR
+        if not directory.is_dir():
+            return []
+        return [self.load_file(p, replace=replace)
+                for p in sorted(directory.glob("*.json"))]
+
+    # ------------------------------------------------------------------
+    def invalidate(self, name: str | None = None) -> None:
+        """Drop cached models/databases (all, or one id) so the next
+        access rebuilds; registrations are kept."""
+        with self._lock:
+            if name is None:
+                self._models.clear()
+                self._dbs.clear()
+                return
+            arch_id = self.resolve(name)
+            self._models.pop(arch_id, None)
+            self._dbs.pop(arch_id, None)
+
+
+# --------------------------------------------------------------------------
+# The process-wide registry: built-in architectures + shipped model files
+# --------------------------------------------------------------------------
+
+_DEFAULT: ArchRegistry | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def _builtin_registry() -> ArchRegistry:
+    reg = ArchRegistry()
+
+    def _skl() -> MachineModel:
+        from .skylake import build_skylake_model
+        return build_skylake_model()
+
+    def _zen() -> MachineModel:
+        from .zen import build_zen_model
+        return build_zen_model()
+
+    def _tpu() -> MachineModel:
+        from .tpu_v5e import build_tpu_v5e_model
+        return build_tpu_v5e_model()
+
+    reg.register_lazy("skl", _skl, aliases=("skylake",))
+    reg.register_lazy("zen", _zen, aliases=("zen1", "znver1"))
+    reg.register_lazy("tpu_v5e", _tpu, aliases=("tpu", "v5e"))
+    reg.discover()
+    return reg
+
+
+def default_registry() -> ArchRegistry:
+    """The process-wide shared registry: lazy builders for the built-in
+    Skylake / Zen / TPU v5e models plus every shipped
+    ``arch/models/*.json`` artifact."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = _builtin_registry()
+        return _DEFAULT
+
+
+def get_model(arch: str) -> MachineModel:
+    """Convenience: ``default_registry().model(arch)``."""
+    return default_registry().model(arch)

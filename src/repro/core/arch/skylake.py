@@ -11,7 +11,10 @@ Intel (destination-first) operand order, matching OSACA/ibench keys.
 """
 from __future__ import annotations
 
+import functools
+
 from ..database import E, InstrForm, InstructionDB
+from ..machine import MachineModel
 from ..ports import PipelineParams, PortModel, U
 
 SKYLAKE = PortModel(
@@ -56,8 +59,7 @@ def _fp_arith(mnemonics, lat, *, tp=0.5):
     return entries
 
 
-def build_skylake_db() -> InstructionDB:
-    db = InstructionDB("skl", SKYLAKE)
+def _skylake_forms() -> tuple[InstrForm, ...]:
     ent: list[InstrForm] = []
 
     # ---- FP moves / loads / stores -----------------------------------
@@ -199,13 +201,30 @@ def build_skylake_db() -> InstructionDB:
     # (paper Table II shows a blank row for `ja .L10`; real HW uses P6 —
     #  recorded as a model deviation in DESIGN.md)
     from ..isa import _BRANCHES
-    for b in _BRANCHES:
+    # sorted: form-table order must be deterministic so the serialized
+    # model (and MachineModel.digest) is stable across processes
+    for b in sorted(_BRANCHES):
         ent.append(E(b, "*", [], 0.5, 0, "branch: unported in paper model"))
     ent.append(E("call", "*", [], 1, 0))
 
-    for e in ent:
-        db.add(e)
-    return db
+    return tuple(ent)
+
+
+@functools.lru_cache(maxsize=None)
+def build_skylake_model() -> MachineModel:
+    """The Skylake machine as one declarative artifact: the ``SKYLAKE``
+    topology plus the full instruction-form table.  Registered lazily
+    under ``"skl"`` (alias ``"skylake"``) by the default
+    :class:`~repro.core.arch.registry.ArchRegistry`."""
+    return MachineModel.from_port_model(
+        SKYLAKE, arch_id="skl", aliases=("skylake",),
+        forms=_skylake_forms())
+
+
+def build_skylake_db() -> InstructionDB:
+    """A fresh Skylake :class:`InstructionDB` (prefer the cached
+    ``default_registry().database("skl")`` / ``AnalysisService``)."""
+    return build_skylake_model().build_db()
 
 
 # Store->load forwarding latency (kept as a module alias; the canonical

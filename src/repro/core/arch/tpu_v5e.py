@@ -12,6 +12,9 @@ Hardware constants (per chip) as given in the assignment brief:
 """
 from __future__ import annotations
 
+import functools
+
+from ..machine import MachineModel
 from ..ports import PortModel
 
 TPU_V5E = PortModel(
@@ -41,3 +44,28 @@ VPU_OP_WEIGHT = {
     "minimum": 1.0, "compare": 1.0, "select": 1.0, "convert": 1.0,
     "exponential-minus-one": 4.0, "logistic": 6.0,
 }
+
+# the serializable machine-model view of the constants above; the HLO
+# analyzer reads these keys from MachineModel.constants, so a derived /
+# JSON-loaded TPU variant can rescale them without code changes
+CONSTANTS = {
+    "peak_flops": PEAK_FLOPS,
+    "vpu_flops": VPU_FLOPS,
+    "hbm_bw": HBM_BW,
+    "ici_bw": ICI_BW,
+    "ici_links_per_axis": ICI_LINKS_PER_AXIS,
+    "hbm_per_chip": HBM_PER_CHIP,
+    "vpu_op_weight": VPU_OP_WEIGHT,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def build_tpu_v5e_model() -> MachineModel:
+    """The TPU v5e machine as one declarative artifact: the ``TPU_V5E``
+    pipe topology plus the hardware constants (no instruction-form
+    table — HLO op costs are computed, not looked up).  Registered
+    lazily under ``"tpu_v5e"`` (aliases ``"tpu"``/``"v5e"``) by the
+    default :class:`~repro.core.arch.registry.ArchRegistry`."""
+    return MachineModel.from_port_model(
+        TPU_V5E, arch_id="tpu_v5e", aliases=("tpu", "v5e"),
+        constants=CONSTANTS)

@@ -16,7 +16,10 @@ otherwise.
 """
 from __future__ import annotations
 
+import functools
+
 from ..database import E, InstrForm, InstructionDB, widen_double_pumped
+from ..machine import MachineModel
 from ..ports import PipelineParams, PortModel, U
 
 ZEN = PortModel(
@@ -53,8 +56,7 @@ def _xmm_and_ymm(entries: list[InstrForm]) -> list[InstrForm]:
     return out
 
 
-def build_zen_db() -> InstructionDB:
-    db = InstructionDB("zen", ZEN)
+def _zen_forms() -> tuple[InstrForm, ...]:
     ent: list[InstrForm] = []
 
     # ---- FP moves / loads / stores (Table IV rows) --------------------
@@ -172,13 +174,30 @@ def build_zen_db() -> InstructionDB:
 
     # ---- branches: unported, as in the paper's tables ------------------
     from ..isa import _BRANCHES
-    for b in _BRANCHES:
+    # sorted: form-table order must be deterministic so the serialized
+    # model (and MachineModel.digest) is stable across processes
+    for b in sorted(_BRANCHES):
         ent.append(E(b, "*", [], 0.5, 0, "branch: unported in paper model"))
     ent.append(E("call", "*", [], 1, 0))
 
-    for e in ent:
-        db.add(e)
-    return db
+    return tuple(ent)
+
+
+@functools.lru_cache(maxsize=None)
+def build_zen_model() -> MachineModel:
+    """The Zen machine as one declarative artifact: the ``ZEN`` topology
+    plus the full instruction-form table.  Registered lazily under
+    ``"zen"`` (aliases ``"zen1"``/``"znver1"``) by the default
+    :class:`~repro.core.arch.registry.ArchRegistry`."""
+    return MachineModel.from_port_model(
+        ZEN, arch_id="zen", aliases=("zen1", "znver1"),
+        forms=_zen_forms())
+
+
+def build_zen_db() -> InstructionDB:
+    """A fresh Zen :class:`InstructionDB` (prefer the cached
+    ``default_registry().database("zen")`` / ``AnalysisService``)."""
+    return build_zen_model().build_db()
 
 
 # Store->load forwarding latency (module alias; canonical value on ZEN).

@@ -7,4 +7,5 @@ CPU — the *methodology* of the paper, applied to the machine we have.
 from .ibench import (BenchResult, latency_benchmark, sweep_parallelism,
                      throughput_benchmark)
 from .conflict import conflict_benchmark
-from .model_builder import build_host_model, infer_port_count
+from .model_builder import (build_host_machine, build_host_model,
+                            infer_port_count)

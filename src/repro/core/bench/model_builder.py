@@ -2,8 +2,10 @@
 
 From parallelism sweeps, infer the number of independent ports an
 instruction form can use (reciprocal TP = 1/ports at saturation), then
-assemble a :class:`PortModel` + :class:`InstructionDB` for the host — the
-same workflow the paper walks through for vfmadd132pd on Zen/Skylake.
+assemble a declarative :class:`~repro.core.machine.MachineModel` for the
+host — the same workflow the paper walks through for vfmadd132pd on
+Zen/Skylake, and the measurement-driven counterpart of
+``MachineModel.from_benchmarks``.
 """
 from __future__ import annotations
 
@@ -12,8 +14,9 @@ from typing import Callable
 
 import jax.numpy as jnp
 
-from ..database import E, InstructionDB
-from ..ports import PortModel, U
+from ..database import InstructionDB
+from ..machine import BenchRecord, MachineModel
+from ..ports import PortModel
 from .ibench import BenchResult, sweep_parallelism
 
 
@@ -37,14 +40,16 @@ class MeasuredForm:
     ports: int
 
 
-def build_host_model(ops: dict[str, Callable] | None = None,
-                     shape=(4,), dtype=jnp.float32,
-                     frequency_hz: float = 2.0e9
-                     ) -> tuple[PortModel, InstructionDB,
-                                list[MeasuredForm]]:
-    """Benchmark each op, infer port counts, emit a synthetic port model
-    ("h0", "h1", ...) sized to the widest form, and a database whose
-    occupations reproduce the measured reciprocal throughputs."""
+def build_host_machine(ops: dict[str, Callable] | None = None,
+                       shape=(4,), dtype=jnp.float32,
+                       frequency_hz: float = 2.0e9) -> tuple[
+                           MachineModel, list[MeasuredForm]]:
+    """Benchmark each op and assemble the measured host machine as a
+    declarative :class:`MachineModel` (ports ``"p0" .. "pN"`` sized to
+    the widest form, occupations reproducing the measured reciprocal
+    throughputs).  The model serializes like any other — measured
+    machines are shippable artifacts too.
+    """
     if ops is None:
         ops = {
             "add": lambda x, c: x + c,
@@ -52,25 +57,37 @@ def build_host_model(ops: dict[str, Callable] | None = None,
             "fma": lambda x, c: x * c + c,
             "div": lambda x, c: x / c,
         }
+    records: list[BenchRecord] = []
     measured: list[MeasuredForm] = []
     for name, op in ops.items():
         sweep = sweep_parallelism(op, shape, dtype, name=name)
-        ports = infer_port_count(sweep)
+        records += [BenchRecord(form=name, parallelism=r.parallelism,
+                                value=r.seconds_per_op)
+                    for r in sweep]
         measured.append(MeasuredForm(
             name=name, op=op,
             latency_s=sweep[0].seconds_per_op,
             throughput_s=min(r.seconds_per_op for r in sweep),
-            ports=ports))
-    width = max(m.ports for m in measured)
-    port_names = tuple(f"h{i}" for i in range(width))
-    model = PortModel(name="host-cpu (measured)", ports=port_names,
-                      unit="s", frequency_hz=frequency_hz)
-    db = InstructionDB("host", model)
+            ports=0))  # filled from the built machine below
+    # pipelined=False: in the JAX harness a unit is occupied for the
+    # whole op latency, so port count is latency / saturated TP
+    machine = MachineModel.from_benchmarks(
+        records, arch_id="host", name="host-cpu (measured)", unit="s",
+        pipelined=False, frequency_hz=frequency_hz)
+    # report the port counts the artifact actually carries, so the
+    # benchmark rows can never disagree with the shipped model
+    widths = {f.mnemonic: len(f.uops[0].ports) for f in machine.forms}
     for m in measured:
-        eligible = "|".join(port_names[:m.ports])
-        # occupation in seconds: saturated per-op time * ports
-        cycles = m.throughput_s * m.ports
-        db.add(E(m.name, "v,v,v", [U(eligible, cycles)],
-                 tp=m.throughput_s, lat=m.latency_s,
-                 notes=f"measured, {m.ports} port(s)"))
-    return model, db, measured
+        m.ports = widths[m.name]
+    return machine, measured
+
+
+def build_host_model(ops: dict[str, Callable] | None = None,
+                     shape=(4,), dtype=jnp.float32,
+                     frequency_hz: float = 2.0e9
+                     ) -> tuple[PortModel, InstructionDB,
+                                list[MeasuredForm]]:
+    """Back-compat wrapper around :func:`build_host_machine` returning
+    the runtime views (``PortModel`` + ``InstructionDB``)."""
+    machine, measured = build_host_machine(ops, shape, dtype, frequency_hz)
+    return machine.port_model, machine.database(), measured

@@ -5,7 +5,10 @@ One :class:`AnalysisService` owns every per-architecture instruction
 database and serves *batches* of kernels x architectures x schedulers
 through a single memoized pipeline:
 
-* **DB construction** — each architecture's database is built once and
+* **DB construction** — architectures resolve through an
+  :class:`~repro.core.arch.registry.ArchRegistry` (a private child of
+  the process-wide registry, so runtime ``register()`` calls stay
+  service-local); each database is built once per registry layer and
   shared across the batch.
 * **Form lookups** — ``db.lookup`` results are cached per
   ``(arch, mnemonic, signature)``; a sweep re-resolving the same triad
@@ -36,15 +39,17 @@ from __future__ import annotations
 import asyncio
 import hashlib
 import threading
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Iterable, Mapping, Sequence
 
 from .analysis import AnalysisResult, analyze
-from .arch import canonical_arch
+from .arch.registry import ArchRegistry, UnknownArchError, default_registry
 from .database import InstructionDB
 from .isa import Instruction
 from .kernel import extract_kernel
+from .machine import MachineModel
 from .ports import PortModel, Uop
 from .scheduler import SCHEDULERS, ScheduledUop
 
@@ -57,9 +62,11 @@ class AnalysisRequest:
         kernel: assembly source text (markers/loop detection handled by
             :func:`repro.core.kernel.extract_kernel`) or an already-parsed
             tuple of :class:`~repro.core.isa.Instruction`.
-        arch: architecture id understood by ``repro.core.arch.get_db``
-            (``"skl"``/``"skylake"``, ``"zen"``/``"zen1"``/``"znver1"``)
-            or a name registered via :meth:`AnalysisService.register_db`.
+        arch: architecture id or alias resolved through the service's
+            :class:`~repro.core.arch.registry.ArchRegistry`
+            (``"skl"``/``"skylake"``, ``"zen"``/``"zen1"``/``"znver1"``,
+            any shipped ``arch/models/*.json`` id, or a model registered
+            via :meth:`AnalysisService.register`).
         scheduler: ``"uniform"`` or ``"balanced"``.
         unroll_factor: assembly iterations per source iteration.
         latency_bound: fold the LCD bound into the prediction (default).
@@ -109,9 +116,13 @@ class AnalysisService:
     call from multiple threads (``predict_batch(parallel=True)`` does).
     """
 
-    def __init__(self, max_workers: int = 8):
+    def __init__(self, max_workers: int = 8,
+                 registry: ArchRegistry | None = None):
         self._lock = threading.RLock()
-        self._dbs: dict[str, InstructionDB] = {}
+        # a private child of the (shared) registry: this service's
+        # register() calls shadow the parent without leaking into other
+        # services, while built-in model/DB caches stay shared
+        self._arch = ArchRegistry(parent=registry or default_registry())
         self._lookups: dict[str, Callable[[Instruction], object]] = {}
         self._lp_cache: dict[tuple, list[ScheduledUop]] = {}
         self._results: dict[tuple, AnalysisResult] = {}
@@ -121,16 +132,58 @@ class AnalysisService:
         self.stats = ServiceStats()
 
     # ------------------------------------------------------------------
-    # databases
+    # architectures
     # ------------------------------------------------------------------
-    def register_db(self, name: str, db: InstructionDB) -> None:
-        """Register a custom architecture database under ``name``.
+    @property
+    def registry(self) -> ArchRegistry:
+        """This service's architecture registry (a private child of the
+        process-wide :func:`repro.core.arch.registry.default_registry`)."""
+        return self._arch
 
-        Re-registering a name drops every cached lookup and result for
-        it, so subsequent predictions use the new database."""
-        key = canonical_arch(name)
+    def register(self, model: MachineModel, *,
+                 aliases: Sequence[str] | None = None,
+                 replace: bool = True) -> str:
+        """Register a :class:`MachineModel` with this service.
+
+        The model's id (and aliases) become valid ``AnalysisRequest.arch``
+        values for this service only.  Re-registering an id — including
+        shadowing a built-in like ``"skl"`` — drops every cached lookup
+        and result for it, so subsequent predictions use the new model.
+        An ``arch_id`` that is an *alias spelling* of an existing id
+        (``"skylake"``) shadows the canonical id (``"skl"``) rather than
+        splitting the alias from it.  Returns the canonical id.
+        """
+        try:
+            canonical = self._arch.resolve(model.arch_id)
+        except UnknownArchError:
+            canonical = model.arch_id
+        if canonical != model.arch_id:
+            model = model.derive(canonical, aliases=model.aliases)
+        key = self._arch.register(model, aliases=aliases, replace=replace)
+        self._invalidate_arch(key)
+        return key
+
+    def register_db(self, name: str, db: InstructionDB) -> None:
+        """Deprecated: wrap ``db`` in a :class:`MachineModel` and call
+        :meth:`register` instead.  This shim does exactly that (via
+        :meth:`MachineModel.from_db`) and keeps the old semantics:
+        re-registering a name (or an alias spelling of it) shadows the
+        built-in and drops its cached results."""
+        warnings.warn(
+            "AnalysisService.register_db is deprecated; use "
+            "register(MachineModel.from_db(...)) or register a "
+            "MachineModel directly", DeprecationWarning, stacklevel=2)
+        try:
+            key = self._arch.resolve(name)
+        except UnknownArchError:
+            key = name.lower()
+        self.register(MachineModel.from_db(key, db))
+        # keep the caller's exact database object (old register_db
+        # semantics), not a rebuild from the extracted form table
+        self._arch.prime_database(key, db)
+
+    def _invalidate_arch(self, key: str) -> None:
         with self._lock:
-            self._dbs[key] = db
             self._lookups.pop(key, None)
             for k in [k for k in self._results if k[0] == key]:
                 del self._results[k]
@@ -138,19 +191,13 @@ class AnalysisService:
                 del self._sim_cache[k]
 
     def database(self, arch: str) -> InstructionDB:
-        """The (cached) instruction DB for ``arch``, built on first use."""
-        key = canonical_arch(arch)
-        with self._lock:
-            db = self._dbs.get(key)
-            if db is None:
-                from .arch import get_db
-                db = get_db(key)
-                self._dbs[key] = db
-            return db
+        """The (registry-cached) instruction DB for ``arch``, built on
+        first use."""
+        return self._arch.database(arch)
 
     def _lookup_fn(self, arch: str) -> Callable[[Instruction], object]:
         """Memoized ``db.lookup`` keyed by (mnemonic, signature)."""
-        key = canonical_arch(arch)
+        key = self._arch.resolve(arch)
         with self._lock:
             fn = self._lookups.get(key)
             if fn is not None:
@@ -235,7 +282,7 @@ class AnalysisService:
         if request.mode not in ("analytic", "simulate"):
             raise ValueError(f"unknown mode {request.mode!r} "
                              "(expected 'analytic' or 'simulate')")
-        key = (canonical_arch(request.arch), self._kernel_id(request),
+        key = (self._arch.resolve(request.arch), self._kernel_id(request),
                request.scheduler, request.unroll_factor,
                request.latency_bound, request.mode)
         with self._lock:
@@ -276,7 +323,7 @@ class AnalysisService:
         # multi-scheduler sweep.  Like the result cache, there is no
         # in-flight deduplication: identical cold-cache cells submitted
         # concurrently may each simulate (correctly) — see predict_batch.
-        sim_key = (canonical_arch(request.arch),
+        sim_key = (self._arch.resolve(request.arch),
                    self._kernel_id(request))
         with self._lock:
             sim = self._sim_cache.get(sim_key)
@@ -360,22 +407,30 @@ class AnalysisService:
     # HLO (TPU) path
     # ------------------------------------------------------------------
     def predict_hlo(self, text: str, *, ici_links: float = 1.0,
-                    flop_dtype: str = "bf16", mode: str = "analytic"):
+                    flop_dtype: str = "bf16", mode: str = "analytic",
+                    machine: "str | MachineModel | None" = None):
         """Memoized :func:`repro.core.hlo.analyzer.analyze_hlo`.
 
         Results carry the combined ``max(overlap, critical-path)`` bound
         (``HloAnalysis.terms.bound_combined``); ``mode="simulate"``
         additionally list-schedules the entry ops onto the TPU ports
         (``repro.core.sim.dag``) and fills ``terms.sim_s`` /
-        ``terms.bound_sim``.  The cache key is the module-text digest,
-        so the serving dry-run and roofline sweeps share one pass per
-        compiled program.
+        ``terms.bound_sim``.  ``machine`` selects the accelerator model
+        (an arch id/alias resolved through this service's registry, or a
+        :class:`MachineModel` whose ``constants`` carry the hardware
+        numbers; default ``"tpu_v5e"``).  The cache key is the
+        module-text digest plus the machine digest, so the serving
+        dry-run and roofline sweeps share one pass per compiled program.
         """
         if mode not in ("analytic", "simulate"):
             raise ValueError(f"unknown mode {mode!r} "
                              "(expected 'analytic' or 'simulate')")
+        if machine is None:
+            machine = "tpu_v5e"
+        if isinstance(machine, str):
+            machine = self._arch.model(machine)
         digest = hashlib.sha256(text.encode()).hexdigest()
-        key = (digest, ici_links, flop_dtype, mode)
+        key = (digest, ici_links, flop_dtype, mode, machine.digest)
         with self._lock:
             hit = self._hlo_cache.get(key)
             if hit is not None:
@@ -384,7 +439,7 @@ class AnalysisService:
             self.stats.hlo_misses += 1
         from .hlo.analyzer import analyze_hlo
         res = analyze_hlo(text, ici_links=ici_links, flop_dtype=flop_dtype,
-                          simulate=(mode == "simulate"))
+                          simulate=(mode == "simulate"), machine=machine)
         with self._lock:
             self._hlo_cache[key] = res
         return res

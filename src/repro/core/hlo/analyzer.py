@@ -22,8 +22,8 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-from ..arch.tpu_v5e import (HBM_BW, ICI_BW, PEAK_FLOPS, TPU_V5E,
-                            VPU_FLOPS, VPU_OP_WEIGHT)
+from ..arch.tpu_v5e import CONSTANTS, VPU_OP_WEIGHT
+from ..machine import MachineModel
 from .parser import HloOp, parse_module
 
 # ops that are pure metadata / no data movement of their own
@@ -63,13 +63,18 @@ class Cost:
             ent[0] += c * times
             ent[1] += b * times
 
-    def seconds(self, dtype: str = "bf16",
-                ici_links: float = 1.0) -> dict[str, float]:
+    def seconds(self, dtype: str = "bf16", ici_links: float = 1.0,
+                constants: dict | None = None) -> dict[str, float]:
+        """Per-port occupation in seconds.  ``constants`` are the
+        hardware numbers (``MachineModel.constants`` of the accelerator
+        model — ``peak_flops``/``vpu_flops``/``hbm_bw``/``ici_bw``);
+        default: the built-in TPU v5e values."""
+        c = CONSTANTS if constants is None else {**CONSTANTS, **constants}
         return {
-            "MXU": self.mxu_flops / PEAK_FLOPS[dtype],
-            "VPU": self.vpu_flops / VPU_FLOPS,
-            "HBM": self.hbm_bytes / HBM_BW,
-            "ICI": self.ici_bytes / (ICI_BW * ici_links),
+            "MXU": self.mxu_flops / c["peak_flops"][dtype],
+            "VPU": self.vpu_flops / c["vpu_flops"],
+            "HBM": self.hbm_bytes / c["hbm_bw"],
+            "ICI": self.ici_bytes / (c["ici_bw"] * ici_links),
         }
 
 
@@ -192,8 +197,9 @@ def _dot_flops(op: HloOp) -> float:
     return 2.0 * op.result_shapes[0].elements * contract
 
 
-def _elementwise_flops(op: HloOp) -> float:
-    w = VPU_OP_WEIGHT.get(op.kind)
+def _elementwise_flops(op: HloOp,
+                       weights: dict | None = None) -> float:
+    w = (VPU_OP_WEIGHT if weights is None else weights).get(op.kind)
     if w is None:
         if op.kind in ("reduce", "reduce-window", "scatter", "gather",
                        "dynamic-update-slice", "dynamic-slice", "pad",
@@ -230,13 +236,15 @@ def _collective_link_bytes(op: HloOp) -> float:
 
 
 class _ModuleCost:
-    def __init__(self, ops: list[HloOp]):
+    def __init__(self, ops: list[HloOp], constants: dict | None = None):
         self.by_comp: dict[str, list[HloOp]] = {}
         self.by_name: dict[str, HloOp] = {}
         for o in ops:
             self.by_comp.setdefault(o.computation, []).append(o)
             self.by_name[o.name] = o
         self._memo: dict[tuple[str, bool], Cost] = {}
+        self._weights = (constants or {}).get("vpu_op_weight",
+                                              VPU_OP_WEIGHT)
 
     def _bf16_promoted(self, o: HloOp) -> bool:
         """XLA's CPU BFloat16Normalization promotes bf16 reducing
@@ -309,7 +317,7 @@ class _ModuleCost:
                 upd = o.operand_shapes[1].bytes \
                     if len(o.operand_shapes) > 1 else o.result_bytes
                 c.hbm_bytes += 2 * upd
-            c.vpu_flops += _elementwise_flops(o)
+            c.vpu_flops += _elementwise_flops(o, self._weights)
             return c
         if o.kind == "while":
             body = _BODY_RE.search(o.attrs)
@@ -338,7 +346,7 @@ class _ModuleCost:
                 c.hbm_bytes += o.operand_bytes + o.result_bytes
             return c
         # plain op
-        c.vpu_flops += _elementwise_flops(o)
+        c.vpu_flops += _elementwise_flops(o, self._weights)
         if not in_fusion:
             c.hbm_bytes += o.operand_bytes + o.result_bytes
         return c
@@ -397,7 +405,8 @@ class _ModuleCost:
 
 
 def _critical_path_seconds(mc: _ModuleCost, entry_name: str,
-                           flop_dtype: str, ici_links: float) -> float:
+                           flop_dtype: str, ici_links: float,
+                           constants: dict | None = None) -> float:
     """Longest cost-weighted dependency chain through the entry ops.
 
     The TPU analogue of the x86 loop-carried-dependency bound: each entry
@@ -409,7 +418,8 @@ def _critical_path_seconds(mc: _ModuleCost, entry_name: str,
     finish: dict[str, float] = {}
     best = 0.0
     for o in mc.by_comp.get(entry_name, ()):
-        secs = mc.op_cost(o, in_fusion=False).seconds(flop_dtype, ici_links)
+        secs = mc.op_cost(o, in_fusion=False).seconds(
+            flop_dtype, ici_links, constants)
         w = max(secs.values()) if secs else 0.0
         start = 0.0
         for nm in o.operand_names:
@@ -420,7 +430,8 @@ def _critical_path_seconds(mc: _ModuleCost, entry_name: str,
 
 
 def _scheduled_seconds(mc: _ModuleCost, entry_name: str,
-                       flop_dtype: str, ici_links: float) -> float:
+                       flop_dtype: str, ici_links: float,
+                       constants: dict | None = None) -> float:
     """List-scheduled makespan of the entry computation: the DAG
     analogue of the cycle-level x86 simulator (``repro.core.sim.dag``).
     Refines ``max(bound_overlap, critical_path)`` by modelling port
@@ -429,7 +440,8 @@ def _scheduled_seconds(mc: _ModuleCost, entry_name: str,
 
     nodes = []
     for o in mc.by_comp.get(entry_name, ()):
-        secs = mc.op_cost(o, in_fusion=False).seconds(flop_dtype, ici_links)
+        secs = mc.op_cost(o, in_fusion=False).seconds(
+            flop_dtype, ici_links, constants)
         occ = {k: v for k, v in secs.items() if v > 0.0}
         nodes.append(DagNode(name=o.name, occupation=occ,
                              deps=tuple(o.operand_names)))
@@ -438,9 +450,29 @@ def _scheduled_seconds(mc: _ModuleCost, entry_name: str,
 
 def analyze_hlo(text: str, *, ici_links: float = 1.0,
                 flop_dtype: str = "bf16",
-                simulate: bool = False) -> HloAnalysis:
+                simulate: bool = False,
+                machine: "str | MachineModel | None" = None
+                ) -> HloAnalysis:
+    """Port-model analysis of a compiled HLO module.
+
+    ``machine`` selects the accelerator: an arch id/alias resolved
+    through the default registry or a :class:`MachineModel` whose
+    ``constants`` carry ``peak_flops`` / ``vpu_flops`` / ``hbm_bw`` /
+    ``ici_bw`` (default: the built-in ``"tpu_v5e"`` model), so a
+    derived or JSON-loaded accelerator variant reprices the whole
+    analysis without code changes.
+    """
+    constants = None
+    if machine is not None:
+        if isinstance(machine, str):
+            from ..arch.registry import get_model
+            machine = get_model(machine)
+        # merge over the TPU defaults: a derived model overriding a
+        # single constant (the documented workflow) must not KeyError
+        # on the ones it didn't touch
+        constants = {**CONSTANTS, **machine.constants}
     ops, entry_name = parse_module(text)
-    mc = _ModuleCost(ops)
+    mc = _ModuleCost(ops, constants)
 
     if not entry_name or entry_name not in mc.by_comp:
         # fall back: a computation nothing else calls
@@ -459,13 +491,13 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
         entry_name = uncalled[0] if uncalled else comp_names[0]
 
     total = mc.comp_cost(entry_name, in_fusion=False)
-    secs = total.seconds(flop_dtype, ici_links)
+    secs = total.seconds(flop_dtype, ici_links, constants)
 
     # per-op rows for the report (entry level; whiles aggregated)
     rows = []
     for o in mc.by_comp.get(entry_name, ()):
         c = mc.op_cost(o, in_fusion=False)
-        occ = c.seconds(flop_dtype, ici_links)
+        occ = c.seconds(flop_dtype, ici_links, constants)
         occ = {k: v for k, v in occ.items() if v > 0}
         if not occ:
             continue
@@ -479,8 +511,9 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
         compute_s=secs["MXU"] + secs["VPU"], memory_s=secs["HBM"],
         collective_s=secs["ICI"], mxu_s=secs["MXU"], vpu_s=secs["VPU"],
         critical_path_s=_critical_path_seconds(
-            mc, entry_name, flop_dtype, ici_links),
-        sim_s=_scheduled_seconds(mc, entry_name, flop_dtype, ici_links)
+            mc, entry_name, flop_dtype, ici_links, constants),
+        sim_s=_scheduled_seconds(mc, entry_name, flop_dtype, ici_links,
+                                 constants)
         if simulate else 0.0)
     return HloAnalysis(
         terms=terms, flops=total.mxu_flops + total.vpu_flops,

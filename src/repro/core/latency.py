@@ -23,6 +23,7 @@ from typing import Callable
 
 from .database import InstructionDB
 from .isa import Instruction, Operand
+from .machine import as_database
 
 # mnemonics whose first (Intel-order) operand is read AND written
 _RMW = {"add", "sub", "inc", "dec", "and", "or", "xor", "neg", "not",
@@ -131,6 +132,7 @@ def dependency_edges(kernel: list[Instruction], db: InstructionDB,
     loop-carried edges (value produced in iteration ``i``, consumed in
     ``i+1``).  Shared by :func:`analyze_latency` (LCD bound) and the
     cycle-level simulator's wakeup logic (``repro.core.sim``)."""
+    db = as_database(db)
     if store_forward_latency is None:
         store_forward_latency = db.model.store_forward_latency
     if lookup is None:

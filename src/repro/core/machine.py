@@ -1,0 +1,443 @@
+"""Declarative, serializable machine-model spec (paper Sec. II).
+
+The paper's central workflow is *building a machine model from
+documentation and semi-automatic benchmarking*; its outlook is carrying
+that model to new architectures.  This module makes the model a first-
+class artifact: one :class:`MachineModel` value unifies everything that
+used to be split across :class:`~repro.core.ports.PortModel`,
+:class:`~repro.core.ports.PipelineParams` and imperative
+``build_*_db()`` functions —
+
+* identity: canonical ``arch_id`` plus lookup ``aliases``,
+* port topology: port list, divider pipes, the Zen store-hides-load
+  pairing, the store->load forwarding latency,
+* front-end / out-of-order window parameters for the cycle-level
+  simulator,
+* the full instruction-form table (:class:`~repro.core.database.InstrForm`
+  entries), and
+* free-form ``constants`` for non-x86 machines (the TPU model carries
+  its peak-FLOPs / bandwidth numbers here).
+
+Because the model is data, it round-trips through JSON
+(``MachineModel.from_dict(m.to_dict()) == m``), is cacheable by
+:attr:`~MachineModel.digest`, shippable to workers, diffable in review,
+and cheap to vary (:meth:`~MachineModel.derive`).  Models register with
+the :class:`~repro.core.arch.registry.ArchRegistry`, which resolves
+aliases and caches built databases for every consumer.
+
+Construction paths, mirroring the paper:
+
+* hand-written (documentation-driven): the ``repro.core.arch`` modules,
+* :meth:`MachineModel.from_benchmarks` (semi-automatic, paper Sec. II-B):
+  infer port counts and occupations from ibench-style latency /
+  parallelism-sweep measurements,
+* :meth:`MachineModel.from_db`: wrap an already-built
+  :class:`~repro.core.database.InstructionDB` (migration path for the
+  deprecated ``AnalysisService.register_db``),
+* :meth:`MachineModel.from_json` / registry model files
+  (``src/repro/core/arch/models/*.json``).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field, fields, replace
+from typing import Iterable, Mapping, Sequence
+
+from .database import InstrForm, InstructionDB
+from .ports import PipelineParams, PortModel, Uop
+
+#: schema tag written into every serialized model / model file
+SCHEMA = "repro.machine-model/v1"
+
+
+# --------------------------------------------------------------------------
+# Benchmark records (semi-automatic model construction, paper Sec. II)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BenchRecord:
+    """One ibench-style measurement: an instruction form executed as a
+    dependency chain (``parallelism=1`` — the latency benchmark) or as
+    ``parallelism`` independent chains (the throughput benchmark).
+
+    ``value`` is the per-operation time in model units (cycles for CPUs,
+    seconds for measured hosts) — exactly what
+    ``repro.core.bench.ibench`` reports.
+    """
+
+    form: str                     # mnemonic, e.g. "vfmadd132pd"
+    parallelism: int              # 1 = latency chain; >=2 = throughput
+    value: float                  # per-op time in model units
+    signature: str = "v,v,v"      # operand-type signature
+
+
+# --------------------------------------------------------------------------
+# Serialization helpers (module-level so tools can reuse them)
+# --------------------------------------------------------------------------
+
+def _uop_to_dict(u: Uop) -> dict:
+    # numeric fields are emitted as floats so the canonical JSON (and
+    # therefore MachineModel.digest) is identical before and after a
+    # round trip even when a hand-written table used int literals
+    d: dict = {"ports": list(u.ports)}
+    if u.cycles != 1.0:
+        d["cycles"] = float(u.cycles)
+    if u.hideable_load:
+        d["hideable_load"] = True
+    if u.kind:
+        d["kind"] = u.kind
+    return d
+
+
+def _uop_from_dict(d: Mapping) -> Uop:
+    return Uop(ports=tuple(d["ports"]),
+               cycles=float(d.get("cycles", 1.0)),
+               hideable_load=bool(d.get("hideable_load", False)),
+               kind=str(d.get("kind", "")))
+
+
+def _form_to_dict(f: InstrForm) -> dict:
+    d: dict = {
+        "mnemonic": f.mnemonic,
+        "signature": list(f.signature),
+        "uops": [_uop_to_dict(u) for u in f.uops],
+        "throughput": float(f.throughput),
+        "latency": float(f.latency),
+    }
+    if f.notes:
+        d["notes"] = f.notes
+    return d
+
+
+def _form_from_dict(d: Mapping) -> InstrForm:
+    return InstrForm(
+        mnemonic=d["mnemonic"], signature=tuple(d["signature"]),
+        uops=tuple(_uop_from_dict(u) for u in d["uops"]),
+        throughput=float(d["throughput"]), latency=float(d["latency"]),
+        notes=str(d.get("notes", "")))
+
+
+# --------------------------------------------------------------------------
+# The spec
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MachineModel:
+    """One architecture as a single declarative value (see module doc)."""
+
+    arch_id: str                          # canonical lowercase id ("skl")
+    name: str                             # display name ("Intel Skylake")
+    ports: tuple[str, ...]
+    aliases: tuple[str, ...] = ()         # lowercase lookup aliases
+    divider_ports: tuple[str, ...] = ()   # "<p> - DV" divider pipes
+    store_hides_load: bool = False        # Zen AGU pairing (Sec. III-A)
+    unit: str = "cy"                      # occupation unit (cy | s)
+    frequency_hz: float | None = None
+    store_forward_latency: float = 0.0
+    pipeline: PipelineParams | None = None
+    forms: tuple[InstrForm, ...] = ()     # the instruction-form table
+    constants: Mapping[str, object] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        # normalize sequence fields so JSON-sourced lists compare equal
+        # to hand-written tuples (and the value stays hashless-frozen);
+        # constants are canonicalized to plain JSON types for the same
+        # reason (a tuple-valued constant would round-trip to a list
+        # and break from_dict(m.to_dict()) == m)
+        for f in ("ports", "aliases", "divider_ports", "forms"):
+            object.__setattr__(self, f, tuple(getattr(self, f)))
+        object.__setattr__(self, "constants", _plain(dict(self.constants)))
+        if not self.arch_id:
+            raise ValueError("arch_id must be non-empty")
+        if self.arch_id != self.arch_id.lower():
+            raise ValueError(f"arch_id must be lowercase: {self.arch_id!r}")
+        if len(set(self.ports)) != len(self.ports):
+            raise ValueError(f"duplicate ports in model {self.arch_id!r}")
+        undeclared = set(self.divider_ports) - set(self.ports)
+        if undeclared:
+            raise ValueError(
+                f"divider ports {sorted(undeclared)} not in the port list "
+                f"of model {self.arch_id!r}")
+        seen = {self.arch_id}
+        for a in self.aliases:
+            if a != a.lower():
+                raise ValueError(f"alias must be lowercase: {a!r}")
+            if a in seen:
+                raise ValueError(
+                    f"alias {a!r} duplicates the id or another alias of "
+                    f"model {self.arch_id!r}")
+            seen.add(a)
+        known = set(self.ports)
+        for f in self.forms:
+            for u in f.uops:
+                unknown = set(u.ports) - known
+                if unknown:
+                    raise ValueError(
+                        f"form {f.mnemonic!r} references unknown ports "
+                        f"{sorted(unknown)} (model {self.arch_id!r} has "
+                        f"{self.ports})")
+
+    # ------------------------------------------------------------------
+    # runtime views (engine-facing objects, built once per instance)
+    # ------------------------------------------------------------------
+    @property
+    def port_model(self) -> PortModel:
+        """The engine-facing :class:`PortModel` view of this spec."""
+        pm = self.__dict__.get("_port_model")
+        if pm is None:
+            pm = PortModel(
+                name=self.name, ports=self.ports,
+                divider_ports=frozenset(self.divider_ports),
+                store_hides_load=self.store_hides_load, unit=self.unit,
+                frequency_hz=self.frequency_hz,
+                store_forward_latency=self.store_forward_latency,
+                pipeline=self.pipeline)
+            self.__dict__["_port_model"] = pm
+        return pm
+
+    def build_db(self) -> InstructionDB:
+        """A *fresh* :class:`InstructionDB` from the form table (callers
+        that mutate their copy get isolation; :meth:`database` caches)."""
+        return InstructionDB(self.arch_id, self.port_model, self.forms)
+
+    def database(self) -> InstructionDB:
+        """The memoized instruction database of this model — built once
+        per :class:`MachineModel` instance and shared by every consumer
+        (the registry adds a per-``arch_id`` layer on top)."""
+        db = self.__dict__.get("_db")
+        if db is None:
+            db = self.build_db()
+            self.__dict__["_db"] = db
+        return db
+
+    # ------------------------------------------------------------------
+    # serialization
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "schema": SCHEMA,
+            "arch_id": self.arch_id,
+            "name": self.name,
+            "aliases": list(self.aliases),
+            "ports": list(self.ports),
+            "divider_ports": list(self.divider_ports),
+            "store_hides_load": self.store_hides_load,
+            "unit": self.unit,
+            "frequency_hz": None if self.frequency_hz is None
+            else float(self.frequency_hz),
+            "store_forward_latency": float(self.store_forward_latency),
+            "pipeline": None if self.pipeline is None else {
+                "issue_width": self.pipeline.issue_width,
+                "rob_size": self.pipeline.rob_size,
+                "scheduler_size": self.pipeline.scheduler_size,
+                "retire_width": self.pipeline.retire_width,
+            },
+            "constants": _plain(self.constants),
+            "forms": [_form_to_dict(f) for f in self.forms],
+        }
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "MachineModel":
+        schema = data.get("schema", SCHEMA)
+        if schema != SCHEMA:
+            raise ValueError(f"unsupported machine-model schema {schema!r} "
+                             f"(expected {SCHEMA!r})")
+        pl = data.get("pipeline")
+        return cls(
+            arch_id=data["arch_id"], name=data["name"],
+            ports=tuple(data["ports"]),
+            aliases=tuple(data.get("aliases", ())),
+            divider_ports=tuple(data.get("divider_ports", ())),
+            store_hides_load=bool(data.get("store_hides_load", False)),
+            unit=str(data.get("unit", "cy")),
+            frequency_hz=data.get("frequency_hz"),
+            store_forward_latency=float(
+                data.get("store_forward_latency", 0.0)),
+            pipeline=None if pl is None else PipelineParams(
+                issue_width=int(pl["issue_width"]),
+                rob_size=int(pl["rob_size"]),
+                scheduler_size=int(pl["scheduler_size"]),
+                retire_width=int(pl["retire_width"])),
+            constants=dict(data.get("constants", {})),
+            forms=tuple(_form_from_dict(f)
+                        for f in data.get("forms", ())))
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    @classmethod
+    def from_json(cls, text: str) -> "MachineModel":
+        return cls.from_dict(json.loads(text))
+
+    @property
+    def digest(self) -> str:
+        """sha256 of the canonical JSON form — a content address for
+        shipping the model to workers / keying distributed caches."""
+        d = self.__dict__.get("_digest")
+        if d is None:
+            canon = json.dumps(self.to_dict(), sort_keys=True,
+                               separators=(",", ":"))
+            d = hashlib.sha256(canon.encode()).hexdigest()
+            self.__dict__["_digest"] = d
+        return d
+
+    # ------------------------------------------------------------------
+    # variants
+    # ------------------------------------------------------------------
+    def derive(self, arch_id: str, **overrides) -> "MachineModel":
+        """A variant architecture sharing this model's tables.
+
+        ``aliases`` reset to ``()`` unless overridden (a derived model
+        must not steal its base's names); everything else defaults to
+        the base value.  The (usually large) ``forms`` tuple is shared
+        by reference, so variants are cheap::
+
+            clx = skl.derive("clx", name="Intel Cascade Lake",
+                             frequency_hz=2.4e9)
+        """
+        overrides.setdefault("aliases", ())
+        bad = set(overrides) - {f.name for f in fields(self)}
+        if bad:
+            raise TypeError(f"unknown MachineModel fields: {sorted(bad)}")
+        return replace(self, arch_id=arch_id, **overrides)
+
+    # ------------------------------------------------------------------
+    # alternative constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_port_model(cls, pm: PortModel, *, arch_id: str,
+                        aliases: Sequence[str] = (),
+                        forms: Sequence[InstrForm] = (),
+                        constants: Mapping[str, object] | None = None,
+                        ) -> "MachineModel":
+        """Lift an existing :class:`PortModel` literal (single source of
+        truth for the topology in the hand-written arch modules) into a
+        full spec."""
+        model = cls(
+            arch_id=arch_id, name=pm.name, ports=pm.ports,
+            aliases=tuple(aliases),
+            divider_ports=tuple(sorted(pm.divider_ports)),
+            store_hides_load=pm.store_hides_load, unit=pm.unit,
+            frequency_hz=pm.frequency_hz,
+            store_forward_latency=pm.store_forward_latency,
+            pipeline=pm.pipeline, forms=tuple(forms),
+            constants=dict(constants or {}))
+        # preserve identity with the source literal (db.model is pm)
+        model.__dict__["_port_model"] = pm
+        return model
+
+    @classmethod
+    def from_db(cls, arch_id: str, db: InstructionDB,
+                aliases: Sequence[str] = ()) -> "MachineModel":
+        """Wrap an already-built database (the ``register_db`` migration
+        path): topology from ``db.model``, forms from ``db.entries()``."""
+        return cls.from_port_model(
+            db.model, arch_id=arch_id, aliases=aliases,
+            forms=tuple(db.entries()))
+
+    @classmethod
+    def from_benchmarks(cls, records: Iterable[BenchRecord], *,
+                        arch_id: str, name: str | None = None,
+                        unit: str = "cy", pipelined: bool = True,
+                        frequency_hz: float | None = None,
+                        ) -> "MachineModel":
+        """Semi-automatic model construction (paper Sec. II-B/II-C).
+
+        For every instruction form, the ``parallelism=1`` record is the
+        latency (dependency-chain) measurement and the fastest record of
+        the sweep is the saturated reciprocal throughput.  Port count
+        follows the paper's argument — *"the instruction form can be
+        spread among two separate ports, because its throughput is one
+        half"*:
+
+        * ``pipelined=True`` (x86-style fully pipelined units): a form
+          with reciprocal throughput ``rtp <= 1`` occupies
+          ``round(1/rtp)`` ports for ~1 unit each; ``rtp > 1`` means a
+          divider-style unpipelined unit — one port occupied for the
+          full ``rtp``.
+        * ``pipelined=False`` (the JAX host harness, where occupation
+          equals latency): port count is ``round(latency / rtp)``.
+
+        Ports are named ``"p0" .. "pN"`` and shared greedily from port 0,
+        matching ``repro.core.bench.model_builder``.  The result
+        validates against the hand-written Skylake/Zen tables in
+        ``tests/test_machine_model.py``.
+        """
+        by_form: dict[tuple[str, str], list[BenchRecord]] = {}
+        for r in records:
+            by_form.setdefault((r.form, r.signature), []).append(r)
+        if not by_form:
+            raise ValueError("no benchmark records given")
+        inferred: list[tuple[str, str, float, float, int, float]] = []
+        for (form, sig), recs in by_form.items():
+            lat_recs = [r for r in recs if r.parallelism == 1]
+            if not lat_recs:
+                raise ValueError(
+                    f"form {form!r} has no parallelism=1 (latency) record")
+            latency = min(r.value for r in lat_recs)
+            rtp = min(r.value for r in recs)
+            if rtp <= 0:
+                raise ValueError(f"form {form!r} has non-positive timing")
+            if pipelined:
+                n_ports = max(1, round(1.0 / rtp)) if rtp < 1.0 else 1
+            else:
+                n_ports = max(1, round(latency / rtp))
+            occupation = rtp * n_ports
+            inferred.append((form, sig, latency, rtp, n_ports, occupation))
+        width = max(n for _, _, _, _, n, _ in inferred)
+        port_names = tuple(f"p{i}" for i in range(width))
+        forms = tuple(
+            InstrForm(
+                mnemonic=form,
+                signature=tuple(s for s in sig.split(",") if s),
+                uops=(Uop(port_names[:n_ports], occupation),),
+                throughput=rtp, latency=latency,
+                notes=f"measured: {n_ports} port(s)")
+            for form, sig, latency, rtp, n_ports, occupation in inferred)
+        return cls(arch_id=arch_id,
+                   name=name or f"{arch_id} (measured)",
+                   ports=port_names, unit=unit,
+                   frequency_hz=frequency_hz, forms=forms)
+
+
+def _plain(value):
+    """Deep-copy a constants tree into plain JSON-serializable types."""
+    if isinstance(value, Mapping):
+        return {str(k): _plain(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_plain(v) for v in value]
+    return value
+
+
+# --------------------------------------------------------------------------
+# Coercion used across the pipeline entry points
+# --------------------------------------------------------------------------
+
+def as_database(source) -> InstructionDB:
+    """Coerce any machine description into an :class:`InstructionDB`.
+
+    Accepts an already-built database (pass-through), a
+    :class:`MachineModel` (its memoized :meth:`~MachineModel.database`),
+    or an architecture id / alias (resolved through the default
+    :class:`~repro.core.arch.registry.ArchRegistry`).  Every analysis
+    entry point (``analyze``, ``analyze_latency``, ``compile_program``,
+    ``simulate_kernel``) funnels through this, so the whole pipeline is
+    parameterized by one model object.
+    """
+    if isinstance(source, InstructionDB):
+        return source
+    if isinstance(source, MachineModel):
+        if not source.forms:
+            raise ValueError(
+                f"machine model {source.arch_id!r} has no instruction-"
+                f"form table — it cannot serve instruction-stream "
+                f"analysis (accelerator/HLO analysis lives in "
+                f"repro.core.hlo.analyzer)")
+        return source.database()
+    if isinstance(source, str):
+        from .arch.registry import default_registry
+        return default_registry().database(source)
+    raise TypeError(
+        f"expected InstructionDB, MachineModel or arch id, got "
+        f"{type(source).__name__}")

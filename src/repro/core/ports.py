@@ -9,6 +9,11 @@ whose uops have ``cycles > 1``).
 The same abstraction models TPU functional pipes (MXU / VPU / HBM / ICI) in
 ``repro.core.arch.tpu_v5e`` — occupation is then measured in seconds rather
 than cycles; the engine is unit-agnostic.
+
+These are the *runtime views*; the declarative, serializable spec that
+owns identity + topology + pipeline + instruction table is
+:class:`repro.core.machine.MachineModel` (``model.port_model`` yields
+the :class:`PortModel`).
 """
 from __future__ import annotations
 

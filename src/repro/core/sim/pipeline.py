@@ -43,6 +43,7 @@ from ..analysis import hidden_instruction_indices
 from ..database import InstructionDB
 from ..isa import Instruction
 from ..latency import dependency_edges
+from ..machine import as_database
 from ..ports import PipelineParams, PortModel
 
 #: fallback window parameters for models that don't declare any
@@ -144,8 +145,11 @@ def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
     :func:`repro.core.analysis.analyze`: unmatched or ignorable
     instructions contribute no uops (but keep a 1-cycle latency for the
     dependency edges), and on store-hides-load models the first hideable
-    load per store executes port-less in the store's shadow.
+    load per store executes port-less in the store's shadow.  ``db``
+    accepts an :class:`InstructionDB`, a
+    :class:`~repro.core.machine.MachineModel`, or an arch id/alias.
     """
+    db = as_database(db)
     model = db.model
     if lookup is None:
         lookup = db.lookup

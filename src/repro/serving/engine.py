@@ -90,7 +90,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------ #
     def dryrun_estimate(self, prompt_len: int = 128,
-                        service=None, mode: str = "analytic") -> dict:
+                        service=None, mode: str = "analytic",
+                        machine=None) -> dict:
         """Static port-model latency estimate of this engine's serving
         path — no execution, just lower/compile + the unified analysis.
 
@@ -101,7 +102,11 @@ class ServingEngine:
         ``max(port_bound, LCD)``).  With ``mode="simulate"`` the entry
         ops are additionally list-scheduled onto the TPU ports
         (``repro.core.sim.dag``) and the scalar summaries use that
-        refined ``terms.bound_sim`` makespan.  Returns per-phase
+        refined ``terms.bound_sim`` makespan.  ``machine`` selects the
+        accelerator model (arch id/alias or
+        ``repro.core.machine.MachineModel``; default the registry's
+        ``"tpu_v5e"``) — estimating the same serving path on a derived
+        accelerator is a one-argument change.  Returns per-phase
         ``HloAnalysis`` objects plus scalar summaries::
 
             {"prefill": HloAnalysis, "decode": HloAnalysis, "mode": ...,
@@ -120,8 +125,10 @@ class ServingEngine:
         decode_txt = self._decode.lower(
             self.params, tok, jnp.int32(prompt_len),
             cache).compile().as_text()
-        prefill = service.predict_hlo(prefill_txt, mode=mode)
-        decode = service.predict_hlo(decode_txt, mode=mode)
+        prefill = service.predict_hlo(prefill_txt, mode=mode,
+                                      machine=machine)
+        decode = service.predict_hlo(decode_txt, mode=mode,
+                                     machine=machine)
         prefill_s = prefill.terms.bound_sim if mode == "simulate" \
             else prefill.terms.bound_combined
         decode_s = decode.terms.bound_sim if mode == "simulate" \

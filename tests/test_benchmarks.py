@@ -9,7 +9,7 @@ from benchmarks import paper_tables
 
 @pytest.mark.parametrize("table", ["table1", "table2", "table4",
                                    "table5", "table6", "table7",
-                                   "fma_example"])
+                                   "fma_example", "registry"])
 def test_paper_table_matches(table):
     rows = paper_tables.ALL_TABLES[table]()
     assert rows

@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Validate the shipped machine-model artifacts (CI lint job).
+
+Checks, for every ``src/repro/core/arch/models/*.json`` plus the
+built-in lazily-registered models:
+
+* the file parses and builds a ``MachineModel`` (full-model files via
+  ``from_dict``, derived files by resolving their ``base`` through the
+  default registry and applying ``derive``),
+* the schema tag is present and supported,
+* every uop of every instruction form references only declared ports,
+* every divider port is itself in the port list,
+* ids and aliases are unique across *all* models (shipped + built-in),
+* full round trip: ``MachineModel.from_json(m.to_json()) == m``.
+
+Run:  PYTHONPATH=src python tools/check_models.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.arch.registry import MODELS_DIR, default_registry  # noqa: E402
+from repro.core.machine import SCHEMA, MachineModel  # noqa: E402
+
+
+def check_model(model: MachineModel, origin: str,
+                errors: list[str]) -> None:
+    # the port/divider checks duplicate MachineModel.__post_init__ on
+    # purpose: this tool validates the *artifact* independently of
+    # whatever construction-time validation the library happens to do
+    known = set(model.ports)
+    undeclared_div = set(model.divider_ports) - known
+    if undeclared_div:
+        errors.append(f"{origin}: divider ports {sorted(undeclared_div)} "
+                      f"not in port list")
+    for f in model.forms:
+        for u in f.uops:
+            bad = set(u.ports) - known
+            if bad:
+                errors.append(
+                    f"{origin}: form {f.mnemonic!r} {f.signature} uses "
+                    f"unknown ports {sorted(bad)}")
+    clone = MachineModel.from_json(model.to_json())
+    if clone != model:
+        errors.append(f"{origin}: JSON round trip is not the identity")
+
+
+def main() -> int:
+    errors: list[str] = []
+    registry = default_registry()
+
+    files = sorted(MODELS_DIR.glob("*.json")) if MODELS_DIR.is_dir() else []
+    file_ids: dict[str, Path] = {}
+    for path in files:
+        try:
+            data = json.loads(path.read_text(encoding="utf-8"))
+        except ValueError as e:
+            errors.append(f"{path.name}: invalid JSON: {e}")
+            continue
+        schema = data.get("schema")
+        if schema != SCHEMA:
+            errors.append(f"{path.name}: schema is {schema!r}, "
+                          f"expected {SCHEMA!r}")
+            continue
+        if "base" in data:
+            arch_id = data.get("overrides", {}).get("arch_id")
+            if not arch_id:
+                errors.append(f"{path.name}: derived model without "
+                              f"overrides.arch_id")
+                continue
+        else:
+            arch_id = data.get("model", data).get("arch_id")
+        file_ids[path.name] = arch_id
+
+    # build every registered model (forces the lazy builders AND the
+    # shipped files, since discover() ran at registry construction)
+    seen_names: dict[str, str] = {}
+    for arch_id in registry.ids():
+        origin = next((n for n, a in file_ids.items() if a == arch_id),
+                      f"builtin:{arch_id}")
+        try:
+            model = registry.model(arch_id)
+        except Exception as e:  # noqa: BLE001 - report, don't crash
+            errors.append(f"{origin}: building {arch_id!r} failed: {e}")
+            continue
+        check_model(model, origin, errors)
+        for name in (model.arch_id, *model.aliases):
+            if name in seen_names and seen_names[name] != origin:
+                errors.append(
+                    f"{origin}: name {name!r} already used by "
+                    f"{seen_names[name]}")
+            seen_names.setdefault(name, origin)
+    # registry-level aliases (register_lazy may add aliases beyond the
+    # model's own, e.g. for the built-ins)
+    for alias, target in registry.alias_map().items():
+        owner = seen_names.get(alias)
+        target_origin = seen_names.get(target, f"builtin:{target}")
+        if owner is not None and owner != target_origin:
+            errors.append(f"alias {alias!r} -> {target!r} clashes with a "
+                          f"name owned by {owner}")
+
+    n_models = len(registry.ids())
+    if errors:
+        print(f"check_models: {len(errors)} error(s) across {n_models} "
+              f"model(s), {len(files)} shipped file(s):")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_models: OK — {n_models} models "
+          f"({', '.join(sorted(registry.ids()))}), "
+          f"{len(files)} shipped file(s), "
+          f"{len(registry.alias_map())} aliases, all unique and valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
