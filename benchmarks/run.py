@@ -42,6 +42,37 @@ def main() -> None:
         for row in fn():
             print(_csv(dict(row)))
 
+    # ---- sweep-engine throughput (perf trajectory) ------------------
+    # writes BENCH_sweep.json and emits one CSV row per batch size; see
+    # benchmarks/sweep_bench.py and docs/performance.md.  Wall-clock
+    # timing like the host benches, so --skip-host skips it too.
+    if args.skip_host:
+        print("sweep_bench/skipped,,run benchmarks.sweep_bench directly")
+    else:
+        from benchmarks.sweep_bench import run_bench
+        sweep_report = run_bench(fast=args.fast)
+        with open("BENCH_sweep.json", "w", encoding="utf-8") as f:
+            json.dump(sweep_report, f, indent=2)
+        for brow in sweep_report["batches"]:
+            row = {"name": f"sweep_bench/batch{brow['batch']}"}
+            for backend, r in brow["backends"].items():
+                row[f"{backend}_pts_per_s"] = r["points_per_s"]
+            if "speedup_jit_vs_numpy" in brow:
+                row["speedup_jit_vs_numpy"] = \
+                    brow["speedup_jit_vs_numpy"]
+                row["speedup_jit_vs_pointwise"] = \
+                    brow["speedup_jit_vs_pointwise"]
+            print(_csv(row))
+        sw = sweep_report["sweep"]
+        print(_csv({"name": "sweep_bench/service_grid",
+                    "backend": sw["backend"],
+                    "cold_cells_per_s": sw["cold_cells_per_s"],
+                    "warm_cells_per_s": sw["warm_cells_per_s"],
+                    "group_dispatches": sw["group_dispatches"],
+                    "sim_runs": sw["sim_runs"],
+                    "edge_hit_rate": sw["hit_rates"]["edge"],
+                    "result_hit_rate": sw["hit_rates"]["result"]}))
+
     # ---- roofline reports over the dry-run sweeps ---------------------
     # v0 = paper-faithful framework baseline; v1 = beyond-baseline
     # optimized defaults (EXPERIMENTS.md §Perf) — both recorded.

@@ -1,0 +1,243 @@
+"""Sweep-throughput benchmark: the perf trajectory of the batch engine.
+
+Measures points/sec of the three ways this repo can run a
+``mode="simulate"`` sweep point and writes ``BENCH_sweep.json``:
+
+* ``pointwise`` — the legacy hot path: one reference tick-loop
+  simulation (``sim.pipeline.simulate``) per sweep point, which is what
+  ``AnalysisService.sweep`` dispatched before the grouped planner.
+* ``numpy`` — the vectorized struct-of-arrays driver
+  (``simulate_many(backend="numpy")``).
+* ``jit`` — the compiled driver (``backend="jit"``): sharded
+  ``jax.jit`` recurrence, float64, bit-compatible with numpy to 1e-9.
+
+It also runs a service-level grid through the grouped
+``AnalysisService.sweep`` planner and records the cache hit rates
+(result/edge/program/classify/machine) plus the number of compiled
+group dispatches — the counters that tell you whether a production
+sweep is amortizing its preprocessing.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/sweep_bench.py \
+        [--fast] [--out BENCH_sweep.json] [--check]
+
+``--check`` exits non-zero if the jit backend is slower than numpy at
+any batch >= 64 (the CI perf-smoke gate).  See docs/performance.md for
+how to read the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+
+def _build_programs():
+    """Compile the paper kernels on both CPU models (prep is excluded
+    from the timed region — the planner memoizes it in production)."""
+    from repro.core import extract_kernel
+    from repro.core import paper_kernels as pk
+    from repro.core.arch.skylake import build_skylake_db
+    from repro.core.arch.zen import build_zen_db
+    from repro.core.sim import compile_program
+
+    skl, zen = build_skylake_db(), build_zen_db()
+    cases = [("skl", pk.TRIAD_SKL_O3), ("zen", pk.TRIAD_ZEN_O3),
+             ("skl", pk.PI_O1), ("zen", pk.PI_O1),
+             ("skl", pk.PI_O2), ("zen", pk.PI_O2),
+             ("skl", pk.PI_SKL_O3), ("zen", pk.PI_ZEN_O3)]
+    return [compile_program(extract_kernel(src),
+                            skl if arch == "skl" else zen)
+            for arch, src in cases]
+
+
+def _time(fn, repeats: int = 1) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_batches(batches: list[int], repeats: int = 2) -> list[dict]:
+    """Driver throughput at each batch size; same programs, bit-equal
+    results across backends (asserted)."""
+    from repro.core.sim import has_jax, simulate, simulate_many
+
+    base = _build_programs()
+    rows = []
+    for B in batches:
+        progs = (base * (-(-B // len(base))))[:B]
+        row: dict = {"batch": B, "backends": {}}
+
+        # legacy pointwise reference: constant per-point cost, so the
+        # rate is measured on a bounded prefix
+        n_pt = min(B, 16)
+        t_pt = _time(lambda: [simulate(p) for p in progs[:n_pt]])
+        row["backends"]["pointwise"] = {
+            "points_per_s": round(n_pt / t_pt, 2),
+            "measured_points": n_pt,
+        }
+
+        t_np = _time(lambda: simulate_many(progs, backend="numpy"),
+                     repeats)
+        row["backends"]["numpy"] = {
+            "seconds": round(t_np, 4),
+            "points_per_s": round(B / t_np, 2),
+        }
+
+        if has_jax():
+            res_np = simulate_many(progs, backend="numpy")
+            t_cold = _time(lambda: simulate_many(progs, backend="jit"))
+            t_jit = _time(lambda: simulate_many(progs, backend="jit"),
+                          repeats)
+            res_jit = simulate_many(progs, backend="jit")
+            drift = max(abs(a.cycles_per_iteration -
+                            b.cycles_per_iteration)
+                        for a, b in zip(res_np, res_jit))
+            assert drift < 1e-9, f"backend drift {drift}"
+            row["backends"]["jit"] = {
+                "cold_seconds": round(t_cold, 4),
+                "seconds": round(t_jit, 4),
+                "points_per_s": round(B / t_jit, 2),
+                "max_drift_vs_numpy": drift,
+            }
+            row["speedup_jit_vs_numpy"] = round(t_np / t_jit, 2)
+            row["speedup_jit_vs_pointwise"] = round(
+                (B / t_jit) / row["backends"]["pointwise"]
+                ["points_per_s"], 2)
+        rows.append(row)
+    return rows
+
+
+def bench_sweep(cells_target: int = 1024) -> dict:
+    """A service-level grid through the grouped planner: cache hit
+    rates and dispatch counts for a ~``cells_target``-cell sweep."""
+    from repro.core import AnalysisService
+    from repro.core import paper_kernels as pk
+
+    from repro.core.sim import has_jax
+
+    kernels = {"triad_skl": pk.TRIAD_SKL_O3, "triad_zen": pk.TRIAD_ZEN_O3,
+               "pi_o1": pk.PI_O1, "pi_o2": pk.PI_O2,
+               "pi_skl_o3": pk.PI_SKL_O3, "pi_zen_o3": pk.PI_ZEN_O3}
+    # force the compiled driver: "auto" would pick numpy here (each
+    # machine group holds only len(kernels) unique programs, below
+    # AUTO_JIT_MIN_BATCH), and the recorded trajectory must say which
+    # driver it measured
+    backend = "jit" if has_jax() else "numpy"
+    svc = AnalysisService(sim_backend=backend)
+    reps = max(1, cells_target // (len(kernels) * 2 * 2))
+    # cold: the first grid pays parsing, analytic passes, program
+    # compilation and the grouped dispatches; warm: every further grid
+    # is the dedupe/cache path a steady-state sweeping service runs on.
+    # The two rates answer different questions — keep them separate.
+    t0 = time.perf_counter()
+    grid = svc.sweep(kernels, archs=("skl", "zen"),
+                     schedulers=("uniform", "balanced"),
+                     mode="simulate")
+    cold_dt = time.perf_counter() - t0
+    cells = len(grid)
+    t1 = time.perf_counter()
+    warm_cells = 0
+    for _ in range(reps - 1):
+        warm_cells += len(svc.sweep(
+            kernels, archs=("skl", "zen"),
+            schedulers=("uniform", "balanced"), mode="simulate"))
+    warm_dt = time.perf_counter() - t1
+    s = svc.stats
+    return {
+        "backend": backend,
+        "cells": cells + warm_cells,
+        "cold_cells": cells,
+        "cold_seconds": round(cold_dt, 4),
+        "cold_cells_per_s": round(cells / cold_dt, 2),
+        "warm_cells": warm_cells,
+        "warm_seconds": round(warm_dt, 4),
+        "warm_cells_per_s": round(warm_cells / warm_dt, 2)
+        if warm_dt else 0.0,
+        "sim_runs": s.sim_runs,
+        "group_dispatches": s.sim_group_dispatches,
+        "hit_rates": {k: round(s.hit_rate(k), 4)
+                      for k in ("result", "lookup", "lp", "edge",
+                                "program", "classify", "machine")},
+        "stats": s.as_dict(),
+    }
+
+
+def run_bench(fast: bool = False) -> dict:
+    from repro.core.sim import AUTO_JIT_MIN_BATCH, JIT_SHARD, has_jax
+
+    batches = [1, 64, 256] if fast else [1, 64, 1024]
+    report = {
+        "benchmark": "sweep_bench",
+        "host": {"cpu_count": os.cpu_count(),
+                 "platform": platform.platform(),
+                 "python": platform.python_version()},
+        "config": {"fast": fast, "jit_shard": JIT_SHARD,
+                   "auto_jit_min_batch": AUTO_JIT_MIN_BATCH,
+                   "jax_available": has_jax()},
+        "batches": bench_batches(batches, repeats=1 if fast else 2),
+        "sweep": bench_sweep(256 if fast else 1024),
+    }
+    gate_rows = [r for r in report["batches"]
+                 if r["batch"] >= 64 and "jit" in r["backends"]]
+    # both 10x readings are recorded so the trajectory is honest about
+    # what is and is not met on this host: vs the legacy per-point hot
+    # path the planner replaced, and vs the vectorized numpy driver
+    # (the latter needs more cores than the 2-core reference container
+    # gives the shard pool — see docs/performance.md)
+    report["gate"] = {
+        "jit_not_slower_than_numpy_at_64plus": all(
+            r["speedup_jit_vs_numpy"] >= 1.0 for r in gate_rows),
+        "jit_10x_pointwise_at_max_batch": bool(
+            gate_rows and gate_rows[-1]
+            ["speedup_jit_vs_pointwise"] >= 10.0),
+        "jit_10x_numpy_at_max_batch": bool(
+            gate_rows and gate_rows[-1]
+            ["speedup_jit_vs_numpy"] >= 10.0),
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller batches (CI perf-smoke)")
+    ap.add_argument("--out", default="BENCH_sweep.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless jit >= numpy at batch >= 64")
+    args = ap.parse_args()
+
+    report = run_bench(fast=args.fast)
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2)
+    for row in report["batches"]:
+        line = f"batch={row['batch']:5d}"
+        for name, r in row["backends"].items():
+            line += f"  {name}={r['points_per_s']:.0f} pts/s"
+        if "speedup_jit_vs_numpy" in row:
+            line += (f"  (jit {row['speedup_jit_vs_numpy']}x numpy, "
+                     f"{row['speedup_jit_vs_pointwise']}x pointwise)")
+        print(line)
+    sw = report["sweep"]
+    print(f"sweep[{sw['backend']}]: cold {sw['cold_cells']} cells at "
+          f"{sw['cold_cells_per_s']} cells/s "
+          f"({sw['group_dispatches']} dispatches, {sw['sim_runs']} "
+          f"simulations), warm {sw['warm_cells']} cells at "
+          f"{sw['warm_cells_per_s']} cells/s")
+    print(f"wrote {args.out}")
+    if args.check and not report["gate"][
+            "jit_not_slower_than_numpy_at_64plus"]:
+        print("FAIL: jit backend slower than numpy at batch >= 64",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

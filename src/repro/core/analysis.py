@@ -186,7 +186,9 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
             latency_bound: bool = True,
             store_forward_latency: float | None = None,
             schedule_fn: Callable | None = None,
-            lookup: Callable | None = None) -> AnalysisResult:
+            lookup: Callable | None = None,
+            edges: "list[tuple[int, int, float, bool]] | None" = None,
+            ) -> AnalysisResult:
     """Predict kernel runtime as ``max(port_bound, loop-carried dep)``.
 
     Args:
@@ -208,6 +210,9 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
             :class:`repro.core.engine.AnalysisService` injects a
             memoizing wrapper around the balanced-scheduler LP here.
         lookup: override for ``db.lookup`` (memoized by the service).
+        edges: precomputed :func:`repro.core.latency.dependency_edges`
+            result for the LCD pass (memoized by the service); ignored
+            when ``store_forward_latency`` overrides the model value.
     """
     db = as_database(db)
     model = db.model
@@ -273,9 +278,11 @@ def analyze(kernel: list[Instruction], db: InstructionDB,
     lat_res: LatencyResult | None = None
     lcd = 0.0
     if latency_bound:
+        if store_forward_latency is not None:
+            edges = None          # override invalidates injected edges
         lat_res = analyze_latency(
             kernel, db, store_forward_latency=store_forward_latency,
-            lookup=lookup)
+            lookup=lookup, edges=edges)
         lcd = lat_res.loop_carried_cycles
     combined = max(port_bound, lcd)
     binding = "latency" if lcd > port_bound + 1e-9 else "throughput"

@@ -102,9 +102,29 @@ class ServiceStats:
     hlo_misses: int = 0
     sim_runs: int = 0        # cycle-level simulations actually executed
     #                          (cache hits are counted in result_hits)
+    edge_hits: int = 0       # memoized latency.dependency_edges
+    edge_misses: int = 0
+    program_hits: int = 0    # memoized sim.compile_program
+    program_misses: int = 0
+    classify_hits: int = 0   # memoized sim.pipeline._classify
+    classify_misses: int = 0
+    machine_hits: int = 0    # memoized machine-model resolution
+    machine_misses: int = 0
+    sim_group_dispatches: int = 0   # compiled batch dispatches issued by
+    #                                 the sweep planner (one per
+    #                                 machine-model group)
 
     def as_dict(self) -> dict[str, int]:
         return dict(vars(self))
+
+    def hit_rate(self, kind: str) -> float:
+        """Hit rate in [0, 1] for one counter pair (``"result"``,
+        ``"lookup"``, ``"lp"``, ``"hlo"``, ``"edge"``, ``"program"``,
+        ``"classify"`` or ``"machine"``); 0.0 when never exercised."""
+        hits = getattr(self, f"{kind}_hits")
+        misses = getattr(self, f"{kind}_misses")
+        total = hits + misses
+        return hits / total if total else 0.0
 
 
 class AnalysisService:
@@ -117,7 +137,8 @@ class AnalysisService:
     """
 
     def __init__(self, max_workers: int = 8,
-                 registry: ArchRegistry | None = None):
+                 registry: ArchRegistry | None = None,
+                 sim_backend: str = "auto"):
         self._lock = threading.RLock()
         # a private child of the (shared) registry: this service's
         # register() calls shadow the parent without leaking into other
@@ -128,7 +149,14 @@ class AnalysisService:
         self._results: dict[tuple, AnalysisResult] = {}
         self._sim_cache: dict[tuple, object] = {}   # SimResult by kernel
         self._hlo_cache: dict[tuple, object] = {}
+        self._edge_cache: dict[tuple, tuple] = {}   # dependency edges
+        self._program_cache: dict[tuple, object] = {}   # SimProgram
+        self._classify_cache: dict[tuple, str] = {}
+        self._machine_cache: dict[str, MachineModel] = {}
         self._max_workers = max_workers
+        #: batch-simulation driver for sweeps: "auto" | "numpy" | "jit"
+        #: | "pallas" (see repro.core.sim.batch and docs/performance.md)
+        self.sim_backend = sim_backend
         self.stats = ServiceStats()
 
     # ------------------------------------------------------------------
@@ -185,15 +213,44 @@ class AnalysisService:
     def _invalidate_arch(self, key: str) -> None:
         with self._lock:
             self._lookups.pop(key, None)
+            # alias spellings may map to the re-registered id, so the
+            # (cheap to refill) resolution cache is dropped wholesale
+            self._machine_cache.clear()
             for k in [k for k in self._results if k[0] == key]:
                 del self._results[k]
             for k in [k for k in self._sim_cache if k[0] == key]:
                 del self._sim_cache[k]
+            # edge/program/classify caches are keyed by machine *digest*
+            # (content addresses), so entries for a replaced model can
+            # never be served for the new one — no invalidation needed
 
     def database(self, arch: str) -> InstructionDB:
         """The (registry-cached) instruction DB for ``arch``, built on
         first use."""
         return self._arch.database(arch)
+
+    def resolve_machine(self, machine: "str | MachineModel",
+                        ) -> MachineModel:
+        """Memoized machine-model resolution (id/alias →
+        :class:`MachineModel`).
+
+        ``predict_hlo``, the sweep planner and
+        ``ServingEngine.dryrun_estimate`` all route through this, so a
+        sweep resolves each model once instead of per call; hit/miss
+        counts land in ``stats.machine_hits`` / ``machine_misses``.
+        """
+        if isinstance(machine, MachineModel):
+            return machine
+        with self._lock:
+            hit = self._machine_cache.get(machine)
+            if hit is not None:
+                self.stats.machine_hits += 1
+                return hit
+            self.stats.machine_misses += 1
+        model = self._arch.model(machine)
+        with self._lock:
+            self._machine_cache[machine] = model
+        return model
 
     def _lookup_fn(self, arch: str) -> Callable[[Instruction], object]:
         """Memoized ``db.lookup`` keyed by (mnemonic, signature)."""
@@ -249,6 +306,80 @@ class AnalysisService:
         return cached
 
     # ------------------------------------------------------------------
+    # memoized per-uop preprocessing (shared by the single-request path
+    # and the sweep planner; keys are (machine digest, kernel id) /
+    # (machine digest, program digest) content addresses)
+    # ------------------------------------------------------------------
+    def dependency_edges(self, kernel: "str | tuple[Instruction, ...]",
+                         arch: str = "skl", syntax: str = "att",
+                         ) -> tuple[tuple[int, int, float, bool], ...]:
+        """Memoized :func:`repro.core.latency.dependency_edges`.
+
+        The edge list depends only on the kernel text and the machine
+        model, so sweeps re-analyzing one kernel across schedulers,
+        unrolls or modes pay for the read/write scan once;
+        ``stats.edge_hits`` / ``edge_misses`` track effectiveness.
+        """
+        machine = self.resolve_machine(arch)
+        req = AnalysisRequest(kernel=kernel, arch=arch, syntax=syntax)
+        key = (machine.digest, self._kernel_id(req))
+        with self._lock:
+            hit = self._edge_cache.get(key)
+            if hit is not None:
+                self.stats.edge_hits += 1
+                return hit
+            self.stats.edge_misses += 1
+        from .latency import dependency_edges as _edges
+        out = tuple(_edges(list(self._kernel_of(req)),
+                           self.database(arch),
+                           lookup=self._lookup_fn(arch)))
+        with self._lock:
+            self._edge_cache[key] = out
+        return out
+
+    def _sim_program(self, request: AnalysisRequest):
+        """Memoized ``sim.compile_program`` for one request, built on
+        the memoized dependency edges."""
+        machine = self.resolve_machine(request.arch)
+        key = (machine.digest, self._kernel_id(request))
+        with self._lock:
+            hit = self._program_cache.get(key)
+            if hit is not None:
+                self.stats.program_hits += 1
+                return hit
+            self.stats.program_misses += 1
+        from .sim import compile_program
+        edges = self.dependency_edges(request.kernel, request.arch,
+                                      request.syntax)
+        prog = compile_program(
+            list(self._kernel_of(request)), self.database(request.arch),
+            lookup=self._lookup_fn(request.arch), edges=edges)
+        with self._lock:
+            self._program_cache[key] = prog
+        return prog
+
+    def _classify_memo(self, cpi: float, frontend: float,
+                       port_bound: float) -> str:
+        """Memoized ``sim.pipeline._classify``: the bottleneck label is
+        a pure function of (steady state, front-end bound, port bound),
+        so identical programs re-simulated across sweep dispatches
+        reuse the verdict; the planner passes this as the batch
+        driver's ``classify`` hook."""
+        from .sim.pipeline import _classify
+
+        key = (cpi, frontend, port_bound)
+        with self._lock:
+            hit = self._classify_cache.get(key)
+            if hit is not None:
+                self.stats.classify_hits += 1
+                return hit
+            self.stats.classify_misses += 1
+        label = _classify(cpi, frontend, port_bound)
+        with self._lock:
+            self._classify_cache[key] = label
+        return label
+
+    # ------------------------------------------------------------------
     # prediction entry points
     # ------------------------------------------------------------------
     def _kernel_of(self, req: AnalysisRequest) -> tuple[Instruction, ...]:
@@ -279,12 +410,7 @@ class AnalysisService:
         simulation; the returned result carries ``bound_sim`` and a
         three-way ``binding``.
         """
-        if request.mode not in ("analytic", "simulate"):
-            raise ValueError(f"unknown mode {request.mode!r} "
-                             "(expected 'analytic' or 'simulate')")
-        key = (self._arch.resolve(request.arch), self._kernel_id(request),
-               request.scheduler, request.unroll_factor,
-               request.latency_bound, request.mode)
+        key = self._result_key(request)
         with self._lock:
             hit = self._results.get(key)
             if hit is not None:
@@ -294,17 +420,36 @@ class AnalysisService:
         if request.mode == "simulate":
             res = self._predict_simulated(request)
         else:
-            kernel = self._kernel_of(request)
-            db = self.database(request.arch)
-            res = analyze(
-                list(kernel), db, scheduler=request.scheduler,
-                unroll_factor=request.unroll_factor,
-                latency_bound=request.latency_bound,
-                schedule_fn=self._schedule_fn(db.model, request.scheduler),
-                lookup=self._lookup_fn(request.arch))
+            res = self._compute_analytic(request)
         with self._lock:
             self._results[key] = res
         return res
+
+    def _result_key(self, request: AnalysisRequest) -> tuple:
+        if request.mode not in ("analytic", "simulate"):
+            raise ValueError(f"unknown mode {request.mode!r} "
+                             "(expected 'analytic' or 'simulate')")
+        return (self._arch.resolve(request.arch),
+                self._kernel_id(request), request.scheduler,
+                request.unroll_factor, request.latency_bound,
+                request.mode)
+
+    def _compute_analytic(self, request: AnalysisRequest
+                          ) -> AnalysisResult:
+        """The uncached analytic pipeline for one request (all
+        sub-steps still draw from the service caches)."""
+        kernel = self._kernel_of(request)
+        db = self.database(request.arch)
+        edges = None
+        if request.latency_bound:
+            edges = list(self.dependency_edges(
+                request.kernel, request.arch, request.syntax))
+        return analyze(
+            list(kernel), db, scheduler=request.scheduler,
+            unroll_factor=request.unroll_factor,
+            latency_bound=request.latency_bound,
+            schedule_fn=self._schedule_fn(db.model, request.scheduler),
+            lookup=self._lookup_fn(request.arch), edges=edges)
 
     def _predict_simulated(self, request: AnalysisRequest
                            ) -> AnalysisResult:
@@ -313,7 +458,7 @@ class AnalysisService:
         simulator."""
         import dataclasses
 
-        from .sim import compile_program, simulate
+        from .sim import simulate
 
         analytic = self.predict(
             dataclasses.replace(request, mode="analytic"))
@@ -328,14 +473,20 @@ class AnalysisService:
         with self._lock:
             sim = self._sim_cache.get(sim_key)
         if sim is None:
-            kernel = self._kernel_of(request)
-            db = self.database(request.arch)
             with self._lock:
                 self.stats.sim_runs += 1
-            sim = simulate(compile_program(
-                list(kernel), db, lookup=self._lookup_fn(request.arch)))
+            sim = simulate(self._sim_program(request))
             with self._lock:
                 self._sim_cache[sim_key] = sim
+        return self._combine_sim(analytic, sim)
+
+    @staticmethod
+    def _combine_sim(analytic: AnalysisResult, sim) -> AnalysisResult:
+        """Fold a cycle-level simulation into an analytic result (the
+        ``mode="simulate"`` combination rule, shared by the single
+        path and the sweep planner)."""
+        import dataclasses
+
         bound_sim = sim.cycles_per_iteration
         analytic_bound = max(analytic.port_bound_cycles,
                              analytic.lcd_cycles)
@@ -355,20 +506,138 @@ class AnalysisService:
             predicted_cycles=predicted, binding=binding)
 
     def predict_batch(self, requests: Sequence[AnalysisRequest],
-                      parallel: bool = False) -> list[AnalysisResult]:
+                      parallel: bool = False,
+                      backend: str | None = None) -> list[AnalysisResult]:
         """Predict every request; order of results matches the input.
 
-        With ``parallel=True`` requests run on a thread pool — the LP
-        solves and parsing release little of the GIL, so this mainly
-        helps when requests interleave with I/O-bound callers.  Note
-        there is no in-flight deduplication: identical cells submitted
-        concurrently on a cold cache may each compute (correctly);
-        the cache deduplicates sequential calls and later batches.
+        Batches run through a three-stage planner instead of a
+        loop-over-requests:
+
+        1. **plan** — every request resolves to its result-cache key;
+           duplicates collapse to one cell, cached cells are served
+           immediately.
+        2. **analytic pass** — the unique analytic cells (including the
+           analytic base of every ``mode="simulate"`` cell) compute
+           once each, drawing parses/lookups/LP solves from the
+           memoized sub-steps (``parallel=True`` spreads them over a
+           thread pool).
+        3. **grouped simulation** — the ``mode="simulate"`` cells that
+           miss the simulation cache compile to :class:`SimProgram`\\ s
+           (memoized by (machine digest, kernel)) and dispatch as *one*
+           vectorized :func:`repro.core.sim.simulate_many` call per
+           machine-model group (``stats.sim_group_dispatches``), on
+           ``backend`` (default: the service's ``sim_backend``;
+           ``"auto"`` compiles with ``jax.jit`` for large groups, see
+           docs/performance.md).  A 1k-point sweep is a handful of
+           compiled dispatches, not 1k tick-loop runs.
+
+        The batch path and the single-request :meth:`predict` share all
+        caches; for ``mode="simulate"`` they run different drivers of
+        the same machine (vectorized dataflow recurrence vs reference
+        tick loop), so whichever computes a cell first fills the cache
+        for both (the drivers' agreement on the paper kernels is locked
+        by ``tests/test_simulator.py`` / ``tests/test_sweep_engine.py``).
         """
-        if not parallel or len(requests) <= 1:
+        if len(requests) <= 1:
             return [self.predict(r) for r in requests]
-        with ThreadPoolExecutor(max_workers=self._max_workers) as ex:
-            return list(ex.map(self.predict, requests))
+
+        # ---- plan: dedupe on result keys -----------------------------
+        keys = [self._result_key(r) for r in requests]
+        unique: dict[tuple, AnalysisRequest] = {}
+        for key, req in zip(keys, requests):
+            unique.setdefault(key, req)
+        with self._lock:
+            done = {k: self._results[k] for k in unique
+                    if k in self._results}
+        todo = {k: r for k, r in unique.items() if k not in done}
+        with self._lock:
+            self.stats.result_hits += len(requests) - len(todo)
+
+        # ---- analytic pass (also the base of every simulate cell) ----
+        analytic_reqs: dict[tuple, AnalysisRequest] = {}
+        for key, req in todo.items():
+            if req.mode == "simulate":
+                import dataclasses
+                base = dataclasses.replace(req, mode="analytic")
+                analytic_reqs[self._result_key(base)] = base
+            else:
+                analytic_reqs[key] = req
+        with self._lock:
+            analytic_todo = {k: r for k, r in analytic_reqs.items()
+                             if k not in self._results}
+            # stats mirror the sequential path: each uncached cell is
+            # one miss — including the analytic base a simulate cell
+            # computes implicitly — everything else a hit
+            self.stats.result_misses += len(todo) + sum(
+                1 for k in analytic_todo if k not in todo)
+        if parallel and len(analytic_todo) > 1:
+            with ThreadPoolExecutor(max_workers=self._max_workers) as ex:
+                computed = list(ex.map(self._compute_analytic,
+                                       analytic_todo.values()))
+        else:
+            computed = [self._compute_analytic(r)
+                        for r in analytic_todo.values()]
+        with self._lock:
+            for k, res in zip(analytic_todo, computed):
+                self._results.setdefault(k, res)
+
+        # ---- grouped simulation dispatch -----------------------------
+        sim_cells = {k: r for k, r in todo.items()
+                     if r.mode == "simulate"}
+        if sim_cells:
+            sim_keys = {k: (self._arch.resolve(r.arch),
+                            self._kernel_id(r))
+                        for k, r in sim_cells.items()}
+            with self._lock:
+                missing = {sk: r for k, r in sim_cells.items()
+                           if (sk := sim_keys[k]) not in self._sim_cache}
+            if missing:
+                from .sim import (AUTO_JIT_MIN_BATCH, simulate,
+                                  simulate_many)
+                progs = [self._sim_program(r) for r in missing.values()]
+                chosen = backend or self.sim_backend
+                counters = {"dispatches": 0}
+                if chosen == "auto" and len(progs) < AUTO_JIT_MIN_BATCH:
+                    # small batches: the adaptive reference tick loop
+                    # (the same driver predict() uses) beats the
+                    # fixed-iteration vectorized pass by an order of
+                    # magnitude per point
+                    sims = [simulate(p) for p in progs]
+                else:
+                    sims = simulate_many(progs, backend=chosen,
+                                         classify=self._classify_memo,
+                                         counters=counters)
+                with self._lock:
+                    self.stats.sim_runs += len(progs)
+                    self.stats.sim_group_dispatches += \
+                        counters.get("dispatches", 0)
+                    for sk, sim in zip(missing, sims):
+                        self._sim_cache.setdefault(sk, sim)
+            # combine analytic base + simulation per cell
+            import dataclasses
+            for k, req in sim_cells.items():
+                base_key = self._result_key(
+                    dataclasses.replace(req, mode="analytic"))
+                with self._lock:
+                    analytic = self._results.get(base_key)
+                    sim = self._sim_cache.get(sim_keys[k])
+                if analytic is None or sim is None:
+                    # a concurrent register()/cache_clear() dropped the
+                    # cell mid-batch: recompute through the (race-free)
+                    # single-request path
+                    res = self.predict(req)
+                else:
+                    res = self._combine_sim(analytic, sim)
+                with self._lock:
+                    self._results.setdefault(k, res)
+
+        out = []
+        for key, req in zip(keys, requests):
+            with self._lock:
+                res = self._results.get(key)
+            # concurrent invalidation between fill and gather: recompute
+            out.append(res if res is not None else self.predict(req))
+        return out
 
     async def predict_async(self,
                             request: AnalysisRequest) -> AnalysisResult:
@@ -382,13 +651,17 @@ class AnalysisService:
               unroll_factors: Mapping[str, int] | None = None,
               parallel: bool = False,
               mode: str = "analytic",
+              backend: str | None = None,
               ) -> dict[tuple[str, str, str], AnalysisResult]:
         """Full grid: ``{(kernel_name, arch, scheduler): AnalysisResult}``.
 
         ``unroll_factors`` optionally maps kernel names to their unroll
         factor (default 1); ``mode="simulate"`` runs the whole grid
-        through the cycle-level simulator backend.  This is the bulk
-        entry point used by ``benchmarks/paper_tables.py``-style sweeps.
+        through the cycle-level simulator backend, planned and
+        dispatched in machine-model groups (see :meth:`predict_batch`;
+        ``backend`` picks the batch-simulation driver).  This is the
+        bulk entry point used by ``benchmarks/paper_tables.py``-style
+        sweeps.
         """
         unroll_factors = unroll_factors or {}
         names, reqs = [], []
@@ -400,7 +673,8 @@ class AnalysisService:
                         kernel=kern, arch=arch, scheduler=sched,
                         unroll_factor=unroll_factors.get(name, 1),
                         mode=mode))
-        results = self.predict_batch(reqs, parallel=parallel)
+        results = self.predict_batch(reqs, parallel=parallel,
+                                     backend=backend)
         return dict(zip(names, results))
 
     # ------------------------------------------------------------------
@@ -425,10 +699,7 @@ class AnalysisService:
         if mode not in ("analytic", "simulate"):
             raise ValueError(f"unknown mode {mode!r} "
                              "(expected 'analytic' or 'simulate')")
-        if machine is None:
-            machine = "tpu_v5e"
-        if isinstance(machine, str):
-            machine = self._arch.model(machine)
+        machine = self.resolve_machine(machine or "tpu_v5e")
         digest = hashlib.sha256(text.encode()).hexdigest()
         key = (digest, ici_links, flop_dtype, mode, machine.digest)
         with self._lock:
@@ -444,6 +715,28 @@ class AnalysisService:
             self._hlo_cache[key] = res
         return res
 
+    def predict_hlo_batch(self, texts: Sequence[str], *,
+                          ici_links: float = 1.0,
+                          flop_dtype: str = "bf16",
+                          mode: str = "analytic",
+                          machine: "str | MachineModel | None" = None,
+                          ) -> list:
+        """Batched :meth:`predict_hlo` through the sweep planner's
+        discipline: the machine model resolves *once* for the whole
+        batch, duplicate modules collapse onto one cache cell, and each
+        unique module analyzes once.  ``ServingEngine.dryrun_estimate``
+        sends its prefill + decode programs through here, so a serving
+        sweep over prompt lengths re-resolves nothing.
+        """
+        machine = self.resolve_machine(machine or "tpu_v5e")
+        out: dict[str, object] = {}
+        for text in texts:
+            if text not in out:
+                out[text] = self.predict_hlo(
+                    text, ici_links=ici_links, flop_dtype=flop_dtype,
+                    mode=mode, machine=machine)
+        return [out[text] for text in texts]
+
     # ------------------------------------------------------------------
     def cache_clear(self) -> None:
         """Drop every cache (databases are kept) and reset the stats."""
@@ -453,6 +746,10 @@ class AnalysisService:
             self._results.clear()
             self._sim_cache.clear()
             self._hlo_cache.clear()
+            self._edge_cache.clear()
+            self._program_cache.clear()
+            self._classify_cache.clear()
+            self._machine_cache.clear()
             self.stats = ServiceStats()
 
 

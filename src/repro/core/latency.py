@@ -175,7 +175,8 @@ def dependency_edges(kernel: list[Instruction], db: InstructionDB,
 def analyze_latency(kernel: list[Instruction], db: InstructionDB,
                     store_forward_latency: float | None = None,
                     lookup: "Callable[[Instruction], object] | None" = None,
-                    ) -> LatencyResult:
+                    edges: "list[tuple[int, int, float, bool]] | None"
+                    = None) -> LatencyResult:
     """Loop-carried-dependency bound of one assembly iteration.
 
     Args:
@@ -185,15 +186,19 @@ def analyze_latency(kernel: list[Instruction], db: InstructionDB,
             units; ``None`` defaults to ``db.model.store_forward_latency``.
         lookup: optional replacement for ``db.lookup`` (the batched
             ``AnalysisService`` passes a memoized one).
+        edges: precomputed :func:`dependency_edges` result to analyze
+            instead of re-deriving it (the batched ``AnalysisService``
+            passes its memoized edge list).
 
     Returns:
         :class:`LatencyResult` with the heaviest dependency cycle through
         one wrap (iteration ``i`` -> ``i+1``) edge, per assembly iteration.
     """
     n = len(kernel)
-    edges = dependency_edges(
-        kernel, db, store_forward_latency=store_forward_latency,
-        lookup=lookup)
+    if edges is None:
+        edges = dependency_edges(
+            kernel, db, store_forward_latency=store_forward_latency,
+            lookup=lookup)
 
     # LCD: for each wrap edge (u -> v), heaviest intra-iteration DAG path
     # v ->* u, plus the wrap weight, plus lat consumed at u? (edge weights

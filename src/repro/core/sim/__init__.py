@@ -9,13 +9,15 @@ the three backends compose.
 """
 from __future__ import annotations
 
-from .batch import simulate_many
+from .batch import (AUTO_JIT_MIN_BATCH, JIT_SHARD, has_jax,
+                    simulate_many)
 from .dag import DagNode, DagSchedule, schedule_dag
 from .pipeline import (DEFAULT_PARAMS, SimProgram, SimResult, SimUop,
                        compile_program, simulate, simulate_kernel)
 
 __all__ = [
-    "DEFAULT_PARAMS", "DagNode", "DagSchedule", "SimProgram", "SimResult",
-    "SimUop", "compile_program", "schedule_dag", "simulate",
-    "simulate_kernel", "simulate_many",
+    "AUTO_JIT_MIN_BATCH", "DEFAULT_PARAMS", "DagNode", "DagSchedule",
+    "JIT_SHARD", "SimProgram", "SimResult", "SimUop", "compile_program",
+    "has_jax", "schedule_dag", "simulate", "simulate_kernel",
+    "simulate_many",
 ]

@@ -36,6 +36,7 @@ driver for bulk sweeps.  See docs/simulation.md.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -74,6 +75,24 @@ class SimProgram:
     uops: tuple[SimUop, ...]                          # program order
     latency: tuple[float, ...]                        # per instruction
     edges: tuple[tuple[int, int, float, bool], ...]   # (src, dst, w, wrap)
+
+    @property
+    def digest(self) -> str:
+        """Content address of the compiled program (uops, latencies,
+        edges, port list): two programs with equal digests simulate
+        identically on equal pipeline parameters.  Useful for
+        deduplicating or labelling compiled programs; the service-level
+        caches key on (machine digest, kernel) one stage earlier, so
+        the kernel never compiles twice in the first place."""
+        d = self.__dict__.get("_digest")
+        if d is None:
+            import hashlib
+            canon = repr((self.model.name, self.model.ports,
+                          self.n_instructions, self.uops, self.latency,
+                          self.edges))
+            d = hashlib.sha256(canon.encode()).hexdigest()
+            object.__setattr__(self, "_digest", d)
+        return d
 
     @property
     def frontend_cycles(self) -> float:
@@ -137,7 +156,8 @@ class SimResult:
 
 def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
                     lookup: Callable[[Instruction], object] | None = None,
-                    ) -> SimProgram:
+                    edges: Sequence[tuple[int, int, float, bool]] | None
+                    = None) -> SimProgram:
     """Match instruction forms and flatten one loop body into a
     :class:`SimProgram`.
 
@@ -148,6 +168,9 @@ def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
     load per store executes port-less in the store's shadow.  ``db``
     accepts an :class:`InstructionDB`, a
     :class:`~repro.core.machine.MachineModel`, or an arch id/alias.
+    ``edges`` optionally injects precomputed dependency edges (the
+    batched ``AnalysisService`` passes its memoized
+    :func:`repro.core.latency.dependency_edges` result).
     """
     db = as_database(db)
     model = db.model
@@ -170,9 +193,11 @@ def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
                 ports=() if hidden else tuple(uop.ports),
                 cycles=max(1.0, uop.cycles)))
 
-    edges = tuple(dependency_edges(kernel, db, lookup=lookup))
+    if edges is None:
+        edges = dependency_edges(kernel, db, lookup=lookup)
     return SimProgram(model=model, n_instructions=len(kernel),
-                      uops=tuple(uops), latency=tuple(lat), edges=edges)
+                      uops=tuple(uops), latency=tuple(lat),
+                      edges=tuple(edges))
 
 
 # --------------------------------------------------------------------------
@@ -271,6 +296,12 @@ def simulate(program: SimProgram,
         inst.ready = t_ready
         return t_ready
 
+    # steady-state detection history: only the last 2 * max_period
+    # retirement deltas are ever compared, so the scan window is capped
+    # instead of re-deriving the full delta pattern from iter_end on
+    # every retirement (which made long non-periodic runs quadratic)
+    deltas: deque[float] = deque(maxlen=2 * max_period)
+
     scheduler: list[int] = []     # global uop ids, in issue order
     # ROB entries are allocated at issue, in program order, and indexed
     # by global uop id; the value is the completion cycle (None while
@@ -299,19 +330,20 @@ def simulate(program: SimProgram,
             retired += 1
             if rob_head % n_uops == 0:    # an iteration fully retired
                 iter_end.append(float(t))
+                if len(iter_end) >= warmup_iterations + 2:
+                    deltas.append(iter_end[-1] - iter_end[-2])
                 busy_snapshots.append((dict(port_busy_total),
                                        dispatch_count))
         if retired:
             progressed = True
 
-        # ---- periodic steady-state detection -------------------------
-        if retired and len(iter_end) >= warmup_iterations + 2:
-            deltas = [iter_end[k] - iter_end[k - 1]
-                      for k in range(warmup_iterations + 1, len(iter_end))]
+        # ---- periodic steady-state detection (bounded window) --------
+        if retired and deltas:
+            recent = list(deltas)
             for p in range(1, max_period + 1):
-                if len(deltas) >= 2 * p and \
-                        deltas[-p:] == deltas[-2 * p:-p]:
-                    result_cpi = sum(deltas[-p:]) / p
+                if len(recent) >= 2 * p and \
+                        recent[-p:] == recent[-2 * p:-p]:
+                    result_cpi = sum(recent[-p:]) / p
                     converged = True
                     break
             if converged:

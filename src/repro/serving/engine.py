@@ -125,10 +125,10 @@ class ServingEngine:
         decode_txt = self._decode.lower(
             self.params, tok, jnp.int32(prompt_len),
             cache).compile().as_text()
-        prefill = service.predict_hlo(prefill_txt, mode=mode,
-                                      machine=machine)
-        decode = service.predict_hlo(decode_txt, mode=mode,
-                                     machine=machine)
+        # one batched call: the machine model resolves once (memoized on
+        # the service) instead of once per phase per sweep point
+        prefill, decode = service.predict_hlo_batch(
+            [prefill_txt, decode_txt], mode=mode, machine=machine)
         prefill_s = prefill.terms.bound_sim if mode == "simulate" \
             else prefill.terms.bound_combined
         decode_s = decode.terms.bound_sim if mode == "simulate" \
