@@ -30,9 +30,20 @@ SKYLAKE = PortModel(
     store_forward_latency=5.0,
     # Front-end / OoO window for the cycle-level simulator (Intel
     # optimization manual [8], Skylake chapter): 4-wide allocation from
-    # the uop queue, 224-entry ROB, 97-entry unified scheduler.
+    # the uop queue, 224-entry ROB, 97-entry unified scheduler.  The
+    # uiCA-style front end: 5-wide predecode, 4 decoders of which one
+    # handles multi-uop instructions, 1.5K-uop DSB delivering 6/cycle,
+    # 64-uop LSD, macro-fusion of cmp/test+jcc, micro-fused (laminated)
+    # memory uops, reg-reg move elimination, and a ~17-cycle
+    # mispredict recovery on loop entry.
     pipeline=PipelineParams(issue_width=4, rob_size=224,
-                            scheduler_size=97, retire_width=4),
+                            scheduler_size=97, retire_width=4,
+                            predecode_width=5, decode_width=4,
+                            complex_decode_width=1,
+                            dsb_width=6, dsb_size=1536, lsd_size=64,
+                            macro_fusion=True, micro_fusion=True,
+                            move_elimination=True,
+                            mispredict_penalty=17.0),
 )
 
 # Store-address uops: the paper's model sends them to ports 2|3 only

@@ -37,8 +37,18 @@ ZEN = PortModel(
     # family 17h [12]): 6 micro-ops dispatched per cycle, 192-entry
     # retire queue, 84-entry ALU scheduling queue capacity (6 x 14),
     # retire up to 8 ops per cycle.
+    # Zen front end: 4-wide predecode/decode (all four decoders take
+    # multi-op instructions), 2K-op uop cache delivering 8/cycle, no
+    # LSD (loop buffer is Zen 2+), branch fusion, micro-fused memory
+    # ops, move elimination, ~18-cycle mispredict recovery.
     pipeline=PipelineParams(issue_width=6, rob_size=192,
-                            scheduler_size=84, retire_width=8),
+                            scheduler_size=84, retire_width=8,
+                            predecode_width=4, decode_width=4,
+                            complex_decode_width=4,
+                            dsb_width=8, dsb_size=2048, lsd_size=0,
+                            macro_fusion=True, micro_fusion=True,
+                            move_elimination=True,
+                            mispredict_penalty=18.0),
 )
 
 _FMUL = "0|1"      # FP mul / FMA pipes

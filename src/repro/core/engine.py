@@ -359,22 +359,23 @@ class AnalysisService:
         return prog
 
     def _classify_memo(self, cpi: float, frontend: float,
-                       port_bound: float) -> str:
+                       port_bound: float, delivery: float = 0.0,
+                       fe_mode: str = "ideal") -> str:
         """Memoized ``sim.pipeline._classify``: the bottleneck label is
-        a pure function of (steady state, front-end bound, port bound),
-        so identical programs re-simulated across sweep dispatches
-        reuse the verdict; the planner passes this as the batch
-        driver's ``classify`` hook."""
+        a pure function of (steady state, front-end bounds, port
+        bound), so identical programs re-simulated across sweep
+        dispatches reuse the verdict; the planner passes this as the
+        batch driver's ``classify`` hook."""
         from .sim.pipeline import _classify
 
-        key = (cpi, frontend, port_bound)
+        key = (cpi, frontend, port_bound, delivery, fe_mode)
         with self._lock:
             hit = self._classify_cache.get(key)
             if hit is not None:
                 self.stats.classify_hits += 1
                 return hit
             self.stats.classify_misses += 1
-        label = _classify(cpi, frontend, port_bound)
+        label = _classify(cpi, frontend, port_bound, delivery, fe_mode)
         with self._lock:
             self._classify_cache[key] = label
         return label

@@ -232,6 +232,18 @@ class MachineModel:
                 "rob_size": self.pipeline.rob_size,
                 "scheduler_size": self.pipeline.scheduler_size,
                 "retire_width": self.pipeline.retire_width,
+                "predecode_width": self.pipeline.predecode_width,
+                "decode_width": self.pipeline.decode_width,
+                "complex_decode_width":
+                    self.pipeline.complex_decode_width,
+                "dsb_width": self.pipeline.dsb_width,
+                "dsb_size": self.pipeline.dsb_size,
+                "lsd_size": self.pipeline.lsd_size,
+                "macro_fusion": self.pipeline.macro_fusion,
+                "micro_fusion": self.pipeline.micro_fusion,
+                "move_elimination": self.pipeline.move_elimination,
+                "mispredict_penalty":
+                    float(self.pipeline.mispredict_penalty),
             },
             "constants": _plain(self.constants),
             "forms": [_form_to_dict(f) for f in self.forms],
@@ -258,7 +270,23 @@ class MachineModel:
                 issue_width=int(pl["issue_width"]),
                 rob_size=int(pl["rob_size"]),
                 scheduler_size=int(pl["scheduler_size"]),
-                retire_width=int(pl["retire_width"])),
+                retire_width=int(pl["retire_width"]),
+                # front-end block: absent in pre-front-end model files,
+                # which load as "stage not modelled" (the same defaults
+                # PipelineParams declares)
+                predecode_width=int(pl.get("predecode_width", 0)),
+                decode_width=int(pl.get("decode_width", 0)),
+                complex_decode_width=int(
+                    pl.get("complex_decode_width", 1)),
+                dsb_width=int(pl.get("dsb_width", 0)),
+                dsb_size=int(pl.get("dsb_size", 0)),
+                lsd_size=int(pl.get("lsd_size", 0)),
+                macro_fusion=bool(pl.get("macro_fusion", False)),
+                micro_fusion=bool(pl.get("micro_fusion", False)),
+                move_elimination=bool(
+                    pl.get("move_elimination", False)),
+                mispredict_penalty=float(
+                    pl.get("mispredict_penalty", 0.0))),
             constants=dict(data.get("constants", {})),
             forms=tuple(_form_from_dict(f)
                         for f in data.get("forms", ())))

@@ -53,6 +53,16 @@ class PipelineParams:
     infinite scheduler window; these parameters are exactly what the
     simulator adds back.  Values come from the vendor optimization
     manuals the paper cites for its machine models (Intel [8], AMD [12]).
+
+    The second block models the uiCA-style fetch/decode/delivery front
+    end (docs/frontend.md).  Every field of that block defaults to
+    *disabled* (0 / False), which makes ``PipelineParams()`` reproduce
+    the pre-front-end simulator exactly: one uop per issue slot, no
+    delivery constraint, no fusion, no elimination, no recovery delay.
+    Width *consistency* (e.g. decoders wider than the issue stage) is
+    deliberately not enforced here — ``tools/check_models.py`` flags it
+    on shipped artifacts, so experiments can still construct
+    intentionally inconsistent what-if machines.
     """
 
     issue_width: int = 4        # uops issued into the backend per cycle
@@ -60,11 +70,28 @@ class PipelineParams:
     scheduler_size: int = 97    # unified scheduler / reservation stations
     retire_width: int = 4       # uops retired (ROB entries freed) per cycle
 
+    # ---- front end (uiCA-style; 0/False = stage not modelled) --------
+    predecode_width: int = 0    # instructions length-marked per cycle
+    decode_width: int = 0       # instructions decoded (MITE) per cycle
+    complex_decode_width: int = 1   # decoders taking multi-uop instrs
+    dsb_width: int = 0          # uop-cache delivery (uops per cycle)
+    dsb_size: int = 0           # uop-cache capacity (uops)
+    lsd_size: int = 0           # loop-stream-detector capacity (uops)
+    macro_fusion: bool = False      # cmp/test + jcc decode as one
+    micro_fusion: bool = False      # laminated uop pairs share a slot
+    move_elimination: bool = False  # reg-reg moves rename away
+    mispredict_penalty: float = 0.0     # loop-entry recovery cycles
+
     def __post_init__(self) -> None:
         for f in ("issue_width", "rob_size", "scheduler_size",
                   "retire_width"):
             if getattr(self, f) < 1:
                 raise ValueError(f"{f} must be >= 1")
+        for f in ("predecode_width", "decode_width",
+                  "complex_decode_width", "dsb_width", "dsb_size",
+                  "lsd_size", "mispredict_penalty"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be >= 0")
 
 
 @dataclass(frozen=True)

@@ -12,12 +12,15 @@ from __future__ import annotations
 from .batch import (AUTO_JIT_MIN_BATCH, JIT_SHARD, has_jax,
                     simulate_many)
 from .dag import DagNode, DagSchedule, schedule_dag
-from .pipeline import (DEFAULT_PARAMS, SimProgram, SimResult, SimUop,
-                       compile_program, simulate, simulate_kernel)
+from .pipeline import (BOTTLENECKS, DEFAULT_PARAMS, FE_MODE_NAMES,
+                       FrontendSchedule, SimProgram, SimResult, SimUop,
+                       compile_program, frontend_schedule, simulate,
+                       simulate_kernel)
 
 __all__ = [
-    "AUTO_JIT_MIN_BATCH", "DEFAULT_PARAMS", "DagNode", "DagSchedule",
+    "AUTO_JIT_MIN_BATCH", "BOTTLENECKS", "DEFAULT_PARAMS",
+    "DagNode", "DagSchedule", "FE_MODE_NAMES", "FrontendSchedule",
     "JIT_SHARD", "SimProgram", "SimResult", "SimUop", "compile_program",
-    "has_jax", "schedule_dag", "simulate", "simulate_kernel",
-    "simulate_many",
+    "frontend_schedule", "has_jax", "schedule_dag", "simulate",
+    "simulate_kernel", "simulate_many",
 ]

@@ -7,9 +7,20 @@ Microarchitectures") shows those assumptions are exactly where analytic
 predictions diverge from measurement.  This module simulates the missing
 machinery cycle by cycle:
 
-* **front end** — up to ``PipelineParams.issue_width`` uops enter the
-  backend per cycle, strictly in program order; zero-uop instructions
-  (branches in the paper's model, macro-fused compares) consume no slot,
+* **front end** — an explicit uiCA-style fetch/decode/delivery model
+  (see :func:`frontend_schedule` and docs/frontend.md): instructions
+  predecode and decode at configurable widths (multi-uop instructions
+  are restricted to the complex decoders), small loops deliver from the
+  uop cache (DSB) or lock down in the loop stream detector (LSD),
+  cmp/test+branch pairs macro-fuse into one decode unit, micro-fused
+  (laminated) uop pairs share one issue slot but keep two scheduler
+  entries, reg-reg moves are eliminated at rename, and a
+  branch-mispredict recovery penalty delays loop entry.  Up to
+  ``PipelineParams.issue_width`` issue *slots* enter the backend per
+  cycle, strictly in program order; zero-uop instructions (branches in
+  the paper's model) consume no slot.  With every front-end field at
+  its disabled default, one slot is one uop and delivery is
+  unconstrained — bit-identical to the pre-front-end simulator,
 * **finite windows** — every in-flight uop holds one ROB entry from
   issue to retirement and one scheduler entry from issue to dispatch;
   a full window stalls the front end,
@@ -42,7 +53,7 @@ from typing import Callable, Sequence
 
 from ..analysis import hidden_instruction_indices
 from ..database import InstructionDB
-from ..isa import Instruction
+from ..isa import _BRANCHES, Instruction
 from ..latency import dependency_edges
 from ..machine import as_database
 from ..ports import PipelineParams, PortModel
@@ -68,37 +79,58 @@ class SimUop:
 @dataclass(frozen=True)
 class SimProgram:
     """A loop body compiled for simulation: struct-of-arrays friendly
-    uop list + per-instruction latencies + dependency edges."""
+    uop list + per-instruction latencies + dependency edges.
+
+    The three ``*_prev`` / ``eliminable`` tuples are *capabilities*
+    detected at compile time (which uop pairs can laminate, which
+    instructions can macro-fuse, which moves can be eliminated); whether
+    they take effect is decided per simulation by the
+    :class:`~repro.core.ports.PipelineParams` feature flags — see
+    :func:`frontend_schedule`.  Empty tuples mean "no capability"
+    (programs compiled before the front-end model behave identically).
+    """
 
     model: PortModel
     n_instructions: int
     uops: tuple[SimUop, ...]                          # program order
     latency: tuple[float, ...]                        # per instruction
     edges: tuple[tuple[int, int, float, bool], ...]   # (src, dst, w, wrap)
+    # per uop: micro-fuses (laminates) with the previous uop
+    fuse_prev: tuple[bool, ...] = ()
+    # per uop: rename-eliminated when move_elimination is enabled
+    eliminable: tuple[bool, ...] = ()
+    # per instruction: macro-fuses with the previous instruction
+    macro_prev: tuple[bool, ...] = ()
 
     @property
     def digest(self) -> str:
         """Content address of the compiled program (uops, latencies,
-        edges, port list): two programs with equal digests simulate
-        identically on equal pipeline parameters.  Useful for
-        deduplicating or labelling compiled programs; the service-level
-        caches key on (machine digest, kernel) one stage earlier, so
-        the kernel never compiles twice in the first place."""
+        edges, fusion capabilities, port list): two programs with equal
+        digests simulate identically on equal pipeline parameters.
+        Useful for deduplicating or labelling compiled programs; the
+        service-level caches key on (machine digest, kernel) one stage
+        earlier, so the kernel never compiles twice in the first
+        place."""
         d = self.__dict__.get("_digest")
         if d is None:
             import hashlib
             canon = repr((self.model.name, self.model.ports,
                           self.n_instructions, self.uops, self.latency,
-                          self.edges))
+                          self.edges, self.fuse_prev, self.eliminable,
+                          self.macro_prev))
             d = hashlib.sha256(canon.encode()).hexdigest()
             object.__setattr__(self, "_digest", d)
         return d
 
     @property
     def frontend_cycles(self) -> float:
-        """Issue-bandwidth lower bound: uops / issue_width per iteration."""
+        """Front-end lower bound per iteration under the model's own
+        pipeline parameters: the issue-bandwidth bound (slots /
+        issue_width) or the delivery bound of the selected front-end
+        mode, whichever is larger."""
         params = self.model.pipeline or DEFAULT_PARAMS
-        return len(self.uops) / params.issue_width
+        fe = frontend_schedule(self, params)
+        return max(fe.n_slots / params.issue_width, fe.cpi)
 
     @property
     def port_bound_cycles(self) -> float:
@@ -111,6 +143,157 @@ class SimProgram:
                 for p in u.ports:
                     occ[p] += share
         return max(occ.values(), default=0.0)
+
+
+# --------------------------------------------------------------------------
+# Front end: fusion slots + static delivery schedule
+# --------------------------------------------------------------------------
+
+#: bottleneck labels, most- to least-upstream (shared by the reference
+#: tick loop, the batch drivers and the engine's memoized classifier)
+BOTTLENECKS = ("empty", "decode", "dsb", "frontend", "ports",
+               "dependencies")
+
+#: human-readable names of the delivery modes (``FrontendSchedule.mode``)
+FE_MODE_NAMES = {
+    "ideal": "ideal delivery",
+    "lsd": "LSD lock-down",
+    "dsb": "DSB uop cache",
+    "mite": "MITE decoders",
+}
+
+
+@dataclass(frozen=True)
+class FrontendSchedule:
+    """The front end of one (program, params) pair, resolved to a
+    static per-iteration schedule.
+
+    The loop body ends in a taken branch, so fetch/decode/delivery
+    restart at the loop head every iteration: the cycle at which slot
+    ``s`` of iteration ``it`` becomes *deliverable* is simply
+    ``it * cpi + phase[s]`` — a static lower bound the issue stage
+    takes a ``max`` against.  ``cpi == 0`` means delivery is
+    unconstrained (ideal front end, or the loop locked down in the
+    LSD).
+    """
+
+    slot_of: tuple[int, ...]        # per uop -> issue-slot index
+    slot_start: tuple[bool, ...]    # per uop: first uop of its slot
+    n_slots: int                    # issue slots per iteration
+    eliminated: tuple[bool, ...]    # per uop: rename-eliminated
+    mode: str                       # "ideal" | "lsd" | "dsb" | "mite"
+    phase: tuple[float, ...]        # per slot: delivery offset (cycles)
+    cpi: float                      # delivery cycles per iteration
+
+
+def frontend_schedule(prog: SimProgram,
+                      params: PipelineParams) -> FrontendSchedule:
+    """Resolve ``prog``'s compiled fusion capabilities against
+    ``params``'s feature flags into slots and a delivery schedule.
+
+    Mode selection (first match wins):
+
+    * ``lsd``  — the whole body fits in the loop stream detector:
+      locked down past fetch and decode, delivery unconstrained.
+    * ``dsb``  — the body fits in the uop cache: ``dsb_width`` uops per
+      cycle, restarting at the loop head each iteration.
+    * ``mite`` — legacy decode: ``predecode_width`` instructions
+      length-marked and ``decode_width`` decoded per cycle, multi-slot
+      instructions restricted to the ``complex_decode_width`` complex
+      decoders, macro-fused pairs decoding as one unit.
+    * ``ideal`` — no delivery stage modelled (the pre-front-end
+      behavior).
+    """
+    n = len(prog.uops)
+    fuse_prev = prog.fuse_prev or (False,) * n
+    eliminable = prog.eliminable or (False,) * n
+    eliminated = tuple(params.move_elimination and e
+                       for e in eliminable)
+
+    slot_of: list[int] = []
+    s = -1
+    for i in range(n):
+        if not (params.micro_fusion and fuse_prev[i] and s >= 0):
+            s += 1
+        slot_of.append(s)
+    n_slots = s + 1
+    slot_start = tuple(i == 0 or slot_of[i] != slot_of[i - 1]
+                       for i in range(n))
+
+    mode, phase, cpi = "ideal", (0.0,) * n_slots, 0.0
+    if n_slots:
+        if params.lsd_size and n_slots <= params.lsd_size:
+            mode = "lsd"
+        elif params.dsb_width and params.dsb_size \
+                and n_slots <= params.dsb_size:
+            mode = "dsb"
+            phase = tuple(float(i // params.dsb_width)
+                          for i in range(n_slots))
+            cpi = float(-(-n_slots // params.dsb_width))
+        elif params.decode_width:
+            mode = "mite"
+            phase, cpi = _decode_walk(prog, params, slot_of,
+                                      slot_start, n_slots)
+    return FrontendSchedule(slot_of=tuple(slot_of),
+                            slot_start=slot_start, n_slots=n_slots,
+                            eliminated=eliminated, mode=mode,
+                            phase=phase, cpi=cpi)
+
+
+def _decode_walk(prog: SimProgram, params: PipelineParams,
+                 slot_of: list[int], slot_start: tuple[bool, ...],
+                 n_slots: int) -> tuple[tuple[float, ...], float]:
+    """Static MITE walk of one loop body: which cycle does each issue
+    slot leave the decoders?
+
+    Decode units are instructions, with macro-fused cmp/test+branch
+    pairs merged into one unit.  Per cycle, up to ``decode_width``
+    units decode, of which at most ``complex_decode_width`` may be
+    *complex* (produce more than one issue slot); a unit cannot decode
+    before its instructions are length-marked by the predecoder
+    (``predecode_width`` raw instructions per cycle).  Zero-slot units
+    (branches, unmatched forms) still occupy a decoder.
+    """
+    slots_of_instr: list[list[int]] = \
+        [[] for _ in range(prog.n_instructions)]
+    for i, u in enumerate(prog.uops):
+        if slot_start[i]:
+            slots_of_instr[u.instr_index].append(slot_of[i])
+    macro_prev = prog.macro_prev or (False,) * prog.n_instructions
+
+    units: list[tuple[int, list[int]]] = []   # (raw instrs, slots)
+    for idx in range(prog.n_instructions):
+        if params.macro_fusion and macro_prev[idx] and units:
+            raw, slots = units[-1]
+            units[-1] = (raw + 1, slots + slots_of_instr[idx])
+        else:
+            units.append((1, list(slots_of_instr[idx])))
+
+    pw = params.predecode_width
+    cw = max(1, params.complex_decode_width)
+    phase = [0.0] * n_slots
+    raw_done = 0            # raw instructions predecoded before this unit
+    cyc = 0                 # current decode cycle
+    used = complex_used = 0
+    for raw, slots in units:
+        # a unit decodes no earlier than the cycle its *last* raw
+        # instruction is length-marked
+        pre = (raw_done + raw - 1) // pw if pw else 0
+        raw_done += raw
+        is_complex = len(slots) > 1
+        while True:
+            if cyc < pre:
+                cyc, used, complex_used = pre, 0, 0
+            if used >= params.decode_width or \
+                    (is_complex and complex_used >= cw):
+                cyc, used, complex_used = cyc + 1, 0, 0
+                continue
+            break
+        used += 1
+        complex_used += is_complex
+        for s in slots:
+            phase[s] = float(cyc)
+    return tuple(phase), float(cyc + 1)
 
 
 @dataclass
@@ -127,26 +310,42 @@ class SimResult:
     cycles_per_iteration: float
     iterations: int                   # loop bodies retired
     converged: bool
-    bottleneck: str                   # "frontend" | "ports" |
-    #                                   "dependencies" | "empty"
+    bottleneck: str                   # one of BOTTLENECKS
     frontend_cycles: float            # issue-bandwidth bound per iteration
     port_busy: dict[str, float] = field(default_factory=dict)
     #                                 ^ busy cycles per iteration (average)
     params: PipelineParams = DEFAULT_PARAMS
+    delivery_cycles: float = 0.0      # fetch/decode bound per iteration
+    fe_mode: str = "ideal"            # delivery mode (FE_MODE_NAMES key)
 
     def render(self, precision: int = 2) -> str:
-        lines = [f"Simulated: {self.cycles_per_iteration:.{precision}f} "
+        p = precision
+        lines = [f"Simulated: {self.cycles_per_iteration:.{p}f} "
                  f"cy/asm-it over {self.iterations} iterations "
                  f"({'steady state' if self.converged else 'NOT converged'},"
-                 f" bottleneck: {self.bottleneck})",
-                 f"  front end: {self.frontend_cycles:.{precision}f} cy/it "
-                 f"at issue width {self.params.issue_width}, "
-                 f"ROB {self.params.rob_size}, "
-                 f"scheduler {self.params.scheduler_size}"]
-        busy = {p: c for p, c in sorted(self.port_busy.items()) if c > 1e-9}
+                 f" bottleneck: {self.bottleneck})"]
+        # per-stage front-end attribution: the issue stage and the
+        # delivery stage each get their own bound, with the binding one
+        # marked (instead of the old single lumped issue-bandwidth line)
+        issue_binds = self.bottleneck == "frontend"
+        deliv_binds = self.bottleneck in ("decode", "dsb")
+        lines.append(
+            f"  issue: {self.frontend_cycles:.{p}f} cy/it at width "
+            f"{self.params.issue_width}"
+            + ("  <- binds" if issue_binds else ""))
+        mode = FE_MODE_NAMES.get(self.fe_mode, self.fe_mode)
+        if self.fe_mode != "ideal":
+            bound = (f"{self.delivery_cycles:.{p}f} cy/it"
+                     if self.delivery_cycles else "unconstrained")
+            lines.append(f"  delivery [{mode}]: {bound}"
+                         + ("  <- binds" if deliv_binds else ""))
+        lines.append(f"  windows: ROB {self.params.rob_size}, "
+                     f"scheduler {self.params.scheduler_size}")
+        busy = {pt: c for pt, c in sorted(self.port_busy.items())
+                if c > 1e-9}
         if busy:
             lines.append("  port busy [cy/it]: " + "  ".join(
-                f"{p}={c:.{precision}f}" for p, c in busy.items()))
+                f"{pt}={c:.{p}f}" for pt, c in busy.items()))
         return "\n".join(lines)
 
 
@@ -171,6 +370,11 @@ def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
     ``edges`` optionally injects precomputed dependency edges (the
     batched ``AnalysisService`` passes its memoized
     :func:`repro.core.latency.dependency_edges` result).
+
+    Besides the uop stream, compilation records the front-end fusion
+    *capabilities* (which uop pairs laminate, which instruction pairs
+    macro-fuse, which moves are eliminable); :func:`frontend_schedule`
+    decides per simulation whether they take effect.
     """
     db = as_database(db)
     model = db.model
@@ -181,23 +385,74 @@ def compile_program(kernel: Sequence[Instruction], db: InstructionDB,
     hidden_instrs = hidden_instruction_indices(model, entries)
 
     uops: list[SimUop] = []
+    fuse_prev: list[bool] = []
+    eliminable: list[bool] = []
     lat: list[float] = []
     for idx, e in enumerate(entries):
         lat.append(e.latency if e is not None else 1.0)
         if e is None:
             continue
+        elim = _is_eliminable_move(kernel[idx])
+        prev_kind: str | None = None
+        prev_fused = False
         for uop in e.uops:
             hidden = idx in hidden_instrs and uop.hideable_load
+            fused = (prev_kind is not None and not prev_fused
+                     and _laminates(prev_kind, uop.kind))
             uops.append(SimUop(
                 instr_index=idx,
                 ports=() if hidden else tuple(uop.ports),
                 cycles=max(1.0, uop.cycles)))
+            fuse_prev.append(fused)
+            eliminable.append(elim)
+            prev_kind, prev_fused = uop.kind, fused
+
+    macro_prev = tuple(
+        idx > 0 and kernel[idx].mnemonic in _BRANCHES
+        and kernel[idx - 1].mnemonic in ("cmp", "test")
+        for idx in range(len(kernel)))
 
     if edges is None:
         edges = dependency_edges(kernel, db, lookup=lookup)
     return SimProgram(model=model, n_instructions=len(kernel),
                       uops=tuple(uops), latency=tuple(lat),
-                      edges=tuple(edges))
+                      edges=tuple(edges), fuse_prev=tuple(fuse_prev),
+                      eliminable=tuple(eliminable),
+                      macro_prev=macro_prev)
+
+
+#: uop kinds that never initiate a micro-fused pair on their own
+_MEMORY_KINDS = ("load", "store-agu", "store-data", "div")
+
+
+def _laminates(prev_kind: str, kind: str) -> bool:
+    """May a uop of ``kind`` share an issue slot with the directly
+    preceding uop of ``prev_kind`` (same instruction)?  The pairs are
+    the classic laminated forms: load+op (either order), store
+    address+data (and the Zen dual-AGU store), and an execute uop with
+    its divider-pipe companion."""
+    compute_prev = prev_kind not in _MEMORY_KINDS
+    if kind == "load":
+        return compute_prev
+    if prev_kind == "load":
+        return kind not in _MEMORY_KINDS
+    if kind == "div":
+        return compute_prev
+    if prev_kind == "store-agu":
+        return kind in ("store-agu", "store-data")
+    return False
+
+
+def _is_eliminable_move(ins: Instruction) -> bool:
+    """Reg-reg moves are move-elimination candidates (executed at
+    rename, no execution port).  Zero/sign-extending moves are not."""
+    m = ins.mnemonic
+    if not (m == "mov" or m.startswith("vmov") or
+            m in ("movapd", "movaps", "movupd", "movups",
+                  "movsd", "movss", "movdqa", "movdqu")):
+        return False
+    return (len(ins.operands) == 2
+            and all(o.kind == "reg" for o in ins.operands))
 
 
 # --------------------------------------------------------------------------
@@ -219,7 +474,7 @@ def simulate(program: SimProgram,
              params: PipelineParams | None = None, *,
              max_iterations: int = 128,
              warmup_iterations: int = 2,
-             max_period: int = 4,
+             max_period: int = 6,
              max_cycles: int = 50_000) -> SimResult:
     """Run ``program`` repeatedly and return the steady-state
     cycles/iteration.
@@ -241,6 +496,9 @@ def simulate(program: SimProgram,
     n_instr = program.n_instructions
     if n_uops == 0:
         return SimResult(0.0, 0, True, "empty", 0.0, {}, params)
+    fe = frontend_schedule(program, params)
+    uop_ports = tuple(() if fe.eliminated[i] else u.ports
+                      for i, u in enumerate(program.uops))
 
     uops_per_instr = [0] * n_instr
     for u in program.uops:
@@ -254,7 +512,7 @@ def simulate(program: SimProgram,
     port_free = {p: 0.0 for p in ports}     # cycle the port frees up
     port_busy_total = {p: 0.0 for p in ports}
     dispatch_count = 0                      # port uops dispatched so far
-    n_port_uops = sum(1 for u in program.uops if u.ports)
+    n_port_uops = sum(1 for p in uop_ports if p)
     # (port busy totals, dispatch count) at each iteration-retire boundary
     busy_snapshots: list[tuple[dict[str, float], int]] = []
 
@@ -320,30 +578,45 @@ def simulate(program: SimProgram,
     while t < max_cycles:
         progressed = False
 
-        # ---- retire (frees ROB entries, in program order) ------------
+        # ---- retire (frees ROB entries, in program order; bandwidth
+        # counts fused-domain slots — a micro-fused pair's continuation
+        # uop leaves with its slot for free) -------------------------
         retired = 0
-        while rob_head < next_global and retired < params.retire_width:
+        retired_uops = 0
+        while rob_head < next_global:
+            slot = fe.slot_start[rob_head % n_uops]
+            if slot and retired >= params.retire_width:
+                break
             done = completion[rob_head]
             if done is None or done > t:
                 break
             rob_head += 1
-            retired += 1
+            retired += slot
+            retired_uops += 1
             if rob_head % n_uops == 0:    # an iteration fully retired
                 iter_end.append(float(t))
                 if len(iter_end) >= warmup_iterations + 2:
                     deltas.append(iter_end[-1] - iter_end[-2])
                 busy_snapshots.append((dict(port_busy_total),
                                        dispatch_count))
-        if retired:
+        if retired_uops:
             progressed = True
 
-        # ---- periodic steady-state detection (bounded window) --------
-        if retired and deltas:
+        # ---- periodic steady-state detection (bounded window; the
+        # average slope since warmup vetoes matches found inside the
+        # window-fill transient, where a few equal deltas can appear
+        # before the scheduler backlog reaches its steady occupancy) --
+        if retired_uops and deltas:
             recent = list(deltas)
+            a_i, b_i = warmup_iterations, len(iter_end) - 1
+            slope = (iter_end[b_i] - iter_end[a_i]) / max(1, b_i - a_i)
             for p in range(1, max_period + 1):
                 if len(recent) >= 2 * p and \
                         recent[-p:] == recent[-2 * p:-p]:
-                    result_cpi = sum(recent[-p:]) / p
+                    cand = sum(recent[-p:]) / p
+                    if abs(cand - slope) > 0.25 + 0.02 * abs(slope):
+                        continue
+                    result_cpi = cand
                     converged = True
                     break
             if converged:
@@ -360,7 +633,7 @@ def simulate(program: SimProgram,
                         continue
                     it, local = divmod(g, n_uops)
                     uop = program.uops[local]
-                    if port not in uop.ports:
+                    if port not in uop_ports[local]:
                         continue
                     r = ready_cycle(it, uop.instr_index)
                     if r is None or r > t:
@@ -380,26 +653,45 @@ def simulate(program: SimProgram,
                 dispatch_count += len(dispatched)
                 progressed = True
 
-        # ---- issue (in order, bounded by width/ROB/scheduler) --------
+        # ---- issue (in order, bounded by width/delivery/ROB/sched) ---
+        # the width counts issue *slots* (micro-fused pairs share one);
+        # a slot additionally waits for its front-end delivery cycle
+        # and, at stream start, for the mispredict recovery penalty
         issued = 0
-        while issued < params.issue_width and next_global < target_uops:
+        issued_slots = 0
+        while next_global < target_uops:
             it, local = divmod(next_global, n_uops)
             uop = program.uops[local]
+            ports_u = uop_ports[local]
+            if fe.slot_start[local]:
+                if issued_slots >= params.issue_width:
+                    break
+                # the delivery schedule is anchored after the recovery
+                # penalty: fetch only restarts once the mispredicted
+                # loop branch resolves
+                if fe.cpi and t < (params.mispredict_penalty
+                                   + it * fe.cpi
+                                   + fe.phase[fe.slot_of[local]]):
+                    break
+                if next_global == 0 and t < params.mispredict_penalty:
+                    break
             if (next_global - rob_head) >= params.rob_size:
                 break
-            if uop.ports and len(scheduler) >= params.scheduler_size:
+            if ports_u and len(scheduler) >= params.scheduler_size:
                 break
-            if uop.ports:
+            if ports_u:
                 completion.append(None)
                 scheduler.append(next_global)
             else:
-                # port-less uop (hidden load): executes in another uop's
-                # shadow, completing off its instruction's latency
+                # port-less uop (hidden load / eliminated move):
+                # executes in another uop's shadow or at rename,
+                # completing off its instruction's latency
                 inst = instance(it, uop.instr_index)
                 inst.remaining -= 1
                 inst.exec_start = max(inst.exec_start, float(t))
                 completion.append(
                     t + max(1.0, program.latency[uop.instr_index]))
+            issued_slots += fe.slot_start[local]
             next_global += 1
             issued += 1
         if issued:
@@ -435,23 +727,30 @@ def simulate(program: SimProgram,
     else:
         port_busy = {p: c / max(1, len(iter_end))
                      for p, c in port_busy_total.items()}
-    frontend = n_uops / params.issue_width
+    frontend = fe.n_slots / params.issue_width
     return SimResult(
         cycles_per_iteration=result_cpi,
         iterations=len(iter_end), converged=converged,
         bottleneck=_classify(result_cpi, frontend,
-                             program.port_bound_cycles),
-        frontend_cycles=frontend, port_busy=port_busy, params=params)
+                             program.port_bound_cycles, fe.cpi,
+                             fe.mode),
+        frontend_cycles=frontend, port_busy=port_busy, params=params,
+        delivery_cycles=fe.cpi, fe_mode=fe.mode)
 
 
-def _classify(cpi: float, frontend: float, port_bound: float) -> str:
-    """Name the binding constraint of a steady state: issue bandwidth
+def _classify(cpi: float, frontend: float, port_bound: float,
+              delivery: float = 0.0, fe_mode: str = "ideal") -> str:
+    """Name the binding constraint of a steady state (one of
+    :data:`BOTTLENECKS`): fetch/decode delivery saturated ("decode" on
+    the MITE path, "dsb" on the uop-cache path), issue bandwidth
     saturated ("frontend"), the static port requirement reached
     ("ports"), or neither resource explains the pace — the wakeup chain
     and finite windows do ("dependencies")."""
     if cpi <= 0:
         return "empty"
-    if cpi <= frontend * 1.02 + 0.51:
+    if cpi <= max(frontend, delivery) * 1.02 + 0.51:
+        if delivery > frontend * 1.02:
+            return "decode" if fe_mode == "mite" else "dsb"
         return "frontend"
     if cpi <= port_bound * 1.05 + 0.51:
         return "ports"

@@ -7,7 +7,8 @@ from pathlib import Path
 import pytest
 
 ROOT = Path(__file__).resolve().parent.parent
-DOC_PAGES = ["docs/api.md", "docs/simulation.md", "docs/performance.md"]
+DOC_PAGES = ["docs/api.md", "docs/simulation.md", "docs/performance.md",
+             "docs/frontend.md"]
 
 
 def _python_blocks(page: str) -> list[tuple[str, str]]:

@@ -1,0 +1,130 @@
+"""Golden-table regression suite for the simulator comparison table.
+
+``benchmarks.paper_tables.simulator_table`` runs every paper kernel
+through the cycle-level pipeline simulator (front-end model enabled via
+the shipped SKL/Zen machine models) and next to the analytic
+``max(port bound, LCD)`` prediction.  This module pins the whole table
+against committed golden values: any change to the simulator, the
+front-end schedule, or the machine models that moves a paper-kernel
+number shows up here as an explicit diff, not as silent drift.
+
+On mismatch the failing rows are also written to a machine-readable
+diff file (``GOLDEN_DIFF_PATH``, default ``golden-table-diff.json`` in
+the repo root) which CI uploads as an artifact.
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from benchmarks import paper_tables
+from repro.core import paper_kernels as pk
+
+# ------------------------------------------------------------------ #
+# The golden table.  Values are per *source* iteration; ``sim`` comes
+# from the cycle-level simulator with the front-end model enabled
+# (uiCA-style predecode/decode/DSB/LSD + macro/micro fusion), ``analytic``
+# is max(port bound, LCD).  Regenerate with
+#   PYTHONPATH=src:. python -c \
+#     "from benchmarks.paper_tables import simulator_table; \
+#      [print(r) for r in simulator_table()]"
+# and update ONLY when a change to the model is intended and understood.
+# ------------------------------------------------------------------ #
+GOLDEN = {
+    #                 analytic  sim     binding       sim_bottleneck
+    "triad_skl_O3": (0.50, 0.50, "throughput", "frontend"),
+    "triad_zen_O3": (1.00, 1.00, "throughput", "ports"),
+    "pi_skl_O1":    (9.00, 9.00, "latency",    "dependencies"),
+    "pi_skl_O2":    (4.25, 4.00, "simulation", "ports"),
+    "pi_skl_O3":    (2.00, 2.00, "throughput", "ports"),
+    "pi_zen_O1":    (11.50, 12.00, "simulation", "dependencies"),
+    "pi_zen_O2":    (4.00, 4.00, "throughput", "ports"),
+    "pi_zen_O3":    (2.00, 2.00, "throughput", "ports"),
+}
+
+ABS_TOL = 1e-9
+
+
+def _diff_path() -> Path:
+    root = Path(__file__).resolve().parent.parent
+    return Path(os.environ.get("GOLDEN_DIFF_PATH",
+                               root / "golden-table-diff.json"))
+
+
+@pytest.fixture(scope="module")
+def sim_rows():
+    rows = {r["name"].split("/", 1)[1]: r
+            for r in paper_tables.simulator_table()}
+    yield rows
+
+
+def _check_rows(rows):
+    """Compare against GOLDEN; return the list of mismatch records."""
+    diffs = []
+    for name, (analytic, sim, binding, bottleneck) in GOLDEN.items():
+        row = rows.get(name)
+        if row is None:
+            diffs.append({"kernel": name, "field": "row",
+                          "expected": "present", "got": "missing"})
+            continue
+        checks = [
+            ("analytic_cy_it", analytic, row["analytic_cy_it"]),
+            ("sim_cy_it", sim, row["sim_cy_it"]),
+            ("binding", binding, row["binding"]),
+            ("sim_bottleneck", bottleneck, row["sim_bottleneck"]),
+            ("converged", True, row["converged"]),
+        ]
+        for field, exp, got in checks:
+            equal = (abs(got - exp) <= ABS_TOL
+                     if isinstance(exp, float) else got == exp)
+            if not equal:
+                diffs.append({"kernel": name, "field": field,
+                              "expected": exp, "got": got})
+    return diffs
+
+
+def test_simulator_table_matches_golden(sim_rows):
+    assert set(sim_rows) == set(GOLDEN), (
+        "kernel set drifted vs golden table")
+    diffs = _check_rows(sim_rows)
+    if diffs:
+        path = _diff_path()
+        path.write_text(json.dumps(
+            {"golden": {k: list(v) for k, v in GOLDEN.items()},
+             "diffs": diffs}, indent=2) + "\n", encoding="utf-8")
+        pytest.fail(f"{len(diffs)} golden-table mismatch(es), diff "
+                    f"written to {path}:\n"
+                    + "\n".join(f"  {d['kernel']}.{d['field']}: expected "
+                                f"{d['expected']!r}, got {d['got']!r}"
+                                for d in diffs))
+
+
+def test_triad_skl_sim_within_10pct_of_measurement(sim_rows):
+    """The front-end model is what closes the triad gap: the slot-domain
+    issue bound (9 uops -> 7 fused slots / 4-wide) predicts 0.50 cy per
+    source iteration vs the paper's measured 0.53 (Table III) — within
+    10%, where the unfused uop count alone sat ~+25% off at 0.5625+.
+    """
+    measured = pk.TABLE3_MEASURED[("skl", "skl", "O3")]
+    sim = sim_rows["triad_skl_O3"]["sim_cy_it"]
+    rel = abs(sim - measured) / measured
+    assert rel < 0.10, (sim, measured, rel)
+
+
+def test_frontend_binds_the_skl_triad(sim_rows):
+    """On SKL the fused-domain issue width is the binding stage for the
+    -O3 triad; everywhere else ports or the dependency chain bind."""
+    assert sim_rows["triad_skl_O3"]["sim_bottleneck"] == "frontend"
+    others = [n for n in GOLDEN if n != "triad_skl_O3"]
+    assert all(sim_rows[n]["sim_bottleneck"] in ("ports", "dependencies")
+               for n in others)
+
+
+def test_no_stale_diff_artifact_on_success(sim_rows):
+    """A green run must not leave a stale diff file behind (CI only
+    uploads it on failure, but a leftover from a previous red run would
+    be misleading)."""
+    if not _check_rows(sim_rows) and _diff_path().exists():
+        _diff_path().unlink()
+    assert not (_check_rows(sim_rows) and not _diff_path().exists())

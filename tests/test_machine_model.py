@@ -416,3 +416,109 @@ def test_analyze_and_simulate_accept_models_and_ids():
     sim = simulate(compile_program(kern, "skl"))
     assert sim.converged and sim.cycles_per_iteration == \
         pytest.approx(9.0, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Front-end parameters (uiCA-style fetch/decode model) as model fields
+# ---------------------------------------------------------------------------
+def _load_check_models():
+    """Import tools/check_models.py as a module (it is a script, not a
+    package — CI runs it directly)."""
+    import importlib.util
+    path = Path(__file__).resolve().parent.parent / "tools" / \
+        "check_models.py"
+    spec = importlib.util.spec_from_file_location("check_models", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_frontend_fields_serialize_and_round_trip():
+    """The front-end block is part of the artifact: it appears in
+    to_dict(), survives the JSON round trip, and carries the shipped
+    SKL/Zen values."""
+    skl = get_model("skl")
+    pl = skl.to_dict()["pipeline"]
+    assert pl["predecode_width"] == 5 and pl["decode_width"] == 4
+    assert pl["complex_decode_width"] == 1
+    assert pl["dsb_width"] == 6 and pl["dsb_size"] == 1536
+    assert pl["lsd_size"] == 64
+    assert pl["macro_fusion"] and pl["micro_fusion"] \
+        and pl["move_elimination"]
+    assert pl["mispredict_penalty"] == 17.0
+    zen = get_model("zen").to_dict()["pipeline"]
+    # Zen: four symmetric complex-capable decoders, op cache, no LSD
+    assert zen["complex_decode_width"] == 4
+    assert zen["dsb_width"] == 8 and zen["lsd_size"] == 0
+    for arch in ("skl", "zen"):
+        m = get_model(arch)
+        clone = MachineModel.from_json(m.to_json())
+        assert clone == m and clone.pipeline == m.pipeline
+
+
+def test_pre_frontend_artifact_loads_with_stages_disabled():
+    """A model file written before the front-end block existed (only
+    the four window fields) still loads — with every front-end stage
+    disabled, i.e. the pre-front-end simulator semantics."""
+    d = get_model("skl").to_dict()
+    d["pipeline"] = {k: d["pipeline"][k]
+                    for k in ("issue_width", "rob_size",
+                              "scheduler_size", "retire_width")}
+    old = MachineModel.from_dict(d)
+    p = old.pipeline
+    assert p.predecode_width == 0 and p.decode_width == 0
+    assert p.dsb_width == 0 and p.dsb_size == 0 and p.lsd_size == 0
+    assert not (p.macro_fusion or p.micro_fusion or p.move_elimination)
+    assert p.mispredict_penalty == 0.0
+    assert p.complex_decode_width == 1
+
+
+def test_derive_overrides_frontend_params():
+    import dataclasses
+    base = get_model("skl")
+    narrow = dataclasses.replace(base.pipeline, dsb_width=0, dsb_size=0,
+                                 lsd_size=0)
+    variant = base.derive("skl-mite-only", pipeline=narrow)
+    assert variant.pipeline.dsb_width == 0
+    assert variant.pipeline.predecode_width == 5   # untouched fields kept
+    assert base.pipeline.dsb_width == 6            # base unchanged
+
+
+def test_digest_tracks_frontend_fields():
+    import dataclasses
+    base = get_model("skl")
+    tweaked = base.derive("skl-fe-probe", pipeline=dataclasses.replace(
+        base.pipeline, macro_fusion=False))
+    same = base.derive("skl-fe-probe", pipeline=base.pipeline)
+    # an explicit (but value-identical) pipeline leaves the digest alone;
+    # flipping a single front-end flag moves it
+    assert same.digest == base.derive("skl-fe-probe").digest
+    assert tweaked.digest != same.digest
+
+
+def test_check_models_rejects_inconsistent_frontend_widths():
+    import dataclasses
+    cm = _load_check_models()
+    base = get_model("skl")
+
+    def errors_for(**kw):
+        bad = base.derive("skl-bad", pipeline=dataclasses.replace(
+            base.pipeline, **kw))
+        errs = []
+        cm.check_model(bad, "test-artifact", errs)
+        return errs
+
+    assert not errors_for()                       # shipped values pass
+    assert any("decode_width" in e
+               for e in errors_for(decode_width=8))
+    assert any("predecode_width" in e
+               for e in errors_for(predecode_width=2))
+    assert any("complex_decode_width" in e
+               for e in errors_for(complex_decode_width=9,
+                                   decode_width=4))
+    assert any("dsb_width" in e for e in errors_for(dsb_size=0))
+
+
+def test_check_models_main_passes_on_shipped_artifacts():
+    cm = _load_check_models()
+    assert cm.main() == 0

@@ -45,6 +45,30 @@ def check_model(model: MachineModel, origin: str,
                 errors.append(
                     f"{origin}: form {f.mnemonic!r} {f.signature} uses "
                     f"unknown ports {sorted(bad)}")
+    pl = model.pipeline
+    if pl is not None:
+        # front-end width consistency: PipelineParams deliberately does
+        # not enforce these (what-if machines may be inconsistent on
+        # purpose), but a *shipped* artifact must be coherent
+        if pl.decode_width > pl.issue_width:
+            errors.append(
+                f"{origin}: decode_width {pl.decode_width} exceeds "
+                f"issue_width {pl.issue_width} (decoded uops would "
+                f"never drain)")
+        if pl.decode_width and pl.predecode_width and \
+                pl.predecode_width < pl.decode_width:
+            errors.append(
+                f"{origin}: predecode_width {pl.predecode_width} "
+                f"starves the {pl.decode_width}-wide decoders")
+        if pl.decode_width and pl.complex_decode_width > pl.decode_width:
+            errors.append(
+                f"{origin}: complex_decode_width "
+                f"{pl.complex_decode_width} exceeds decode_width "
+                f"{pl.decode_width}")
+        if bool(pl.dsb_width) != bool(pl.dsb_size):
+            errors.append(
+                f"{origin}: dsb_width and dsb_size must be enabled "
+                f"together (got {pl.dsb_width}/{pl.dsb_size})")
     clone = MachineModel.from_json(model.to_json())
     if clone != model:
         errors.append(f"{origin}: JSON round trip is not the identity")
