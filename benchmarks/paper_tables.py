@@ -136,23 +136,36 @@ def fma_model_construction() -> list[dict]:
     return rows
 
 
+# every paper kernel on both CPU models — shared by the simulator
+# comparison and the ECM table so the two sweeps stay in lockstep
+KERNEL_CASES = {
+    "triad_skl_O3": ("skl", pk.TRIAD_SKL_O3, 4),
+    "triad_zen_O3": ("zen", pk.TRIAD_ZEN_O3, 2),
+    "pi_skl_O1": ("skl", pk.PI_O1, 1),
+    "pi_skl_O2": ("skl", pk.PI_O2, 1),
+    "pi_skl_O3": ("skl", pk.PI_SKL_O3, 8),
+    "pi_zen_O1": ("zen", pk.PI_O1, 1),
+    "pi_zen_O2": ("zen", pk.PI_O2, 1),
+    "pi_zen_O3": ("zen", pk.PI_ZEN_O3, 2),
+}
+
+# working sets chosen to land each dataset squarely inside one level of
+# both shipped hierarchies (SKL: 32K/256K/8M, Zen: 32K/512K/8M)
+ECM_WORKING_SETS = {
+    "L1": 16.0 * 1024,
+    "L2": 128.0 * 1024,
+    "L3": 2.0 * 1024 * 1024,
+    "MEM": 64.0 * 1024 * 1024,
+}
+
+
 def simulator_table() -> list[dict]:
     """Third-backend comparison: the cycle-level pipeline simulation
     (``mode="simulate"``) next to the analytic ``max(port, LCD)`` bound
     for every paper kernel on both CPU models (see docs/simulation.md).
     """
-    cases = {
-        "triad_skl_O3": ("skl", pk.TRIAD_SKL_O3, 4),
-        "triad_zen_O3": ("zen", pk.TRIAD_ZEN_O3, 2),
-        "pi_skl_O1": ("skl", pk.PI_O1, 1),
-        "pi_skl_O2": ("skl", pk.PI_O2, 1),
-        "pi_skl_O3": ("skl", pk.PI_SKL_O3, 8),
-        "pi_zen_O1": ("zen", pk.PI_O1, 1),
-        "pi_zen_O2": ("zen", pk.PI_O2, 1),
-        "pi_zen_O3": ("zen", pk.PI_ZEN_O3, 2),
-    }
     rows = []
-    for name, (arch, src, unroll) in cases.items():
+    for name, (arch, src, unroll) in KERNEL_CASES.items():
         res = SERVICE.predict(AnalysisRequest(
             kernel=src, arch=arch, unroll_factor=unroll, mode="simulate"))
         analytic = max(res.port_bound_cycles, res.lcd_cycles)
@@ -168,6 +181,31 @@ def simulator_table() -> list[dict]:
             "rel_to_analytic": (res.bound_sim - analytic) / analytic
             if analytic else 0.0,
         })
+    return rows
+
+
+def ecm_table() -> list[dict]:
+    """ECM memory-hierarchy predictions: every paper kernel at a working
+    set resident in each level of the shipped hierarchy (docs/ecm.md).
+    Working sets at or under L1 must leave the in-core prediction and
+    binding untouched (the paper's infinite-L1 assumption recovered)."""
+    rows = []
+    for name, (arch, src, unroll) in KERNEL_CASES.items():
+        for level, ws in ECM_WORKING_SETS.items():
+            res = SERVICE.predict(AnalysisRequest(
+                kernel=src, arch=arch, unroll_factor=unroll,
+                working_set=ws))
+            ecm = res.ecm_result
+            rows.append({
+                "name": f"ecm/{name}@{level}",
+                "ecm_cy_it": res.ecm_per_source_iteration,
+                "incore_cy": ecm.t_incore,
+                "t_nol_cy": ecm.t_nol,
+                "transfer_cy": ecm.transfer_cycles,
+                "resident": ecm.resident,
+                "binding": res.binding,
+                "notation": ecm.notation(),
+            })
     return rows
 
 
@@ -216,5 +254,6 @@ ALL_TABLES = {
     "table1": table1, "table2": table2, "table3": table3,
     "table4": table4, "table5": table5, "table6": table6,
     "table7": table7, "fma_example": fma_model_construction,
-    "simulator": simulator_table, "registry": registry_guard,
+    "simulator": simulator_table, "ecm": ecm_table,
+    "registry": registry_guard,
 }

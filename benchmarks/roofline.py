@@ -8,9 +8,15 @@ import json
 import os
 
 from repro.configs import get_config
-from repro.core.arch.tpu_v5e import HBM_BW, PEAK_FLOPS
+from repro.core.arch.registry import get_model
 
-PEAK = PEAK_FLOPS["bf16"]
+# Hardware numbers single-sourced from the registry's machine-model
+# artifact — the same constants the HLO analyzer prices with — so this
+# report cannot drift from the prediction path
+# (tests/test_benchmarks.py pins the identity).
+_TPU = get_model("tpu_v5e").constants
+PEAK = _TPU["peak_flops"]["bf16"]
+HBM_BW = _TPU["hbm_bw"]
 SHAPE_TOKENS = {
     "train_4k": (4096, 256), "prefill_32k": (32768, 32),
     "decode_32k": (32768, 128), "long_500k": (524288, 1),

@@ -12,17 +12,23 @@ from .isa import Instruction, parse_assembly
 from .kernel import extract_kernel
 from .latency import LatencyResult, analyze_latency, dependency_edges
 from .machine import BenchRecord, MachineModel, as_database
+from .mem import (AccessStream, CacheLevel, EcmResult, MemoryHierarchy,
+                  TrafficResult, compose_ecm, extract_streams,
+                  predict_traffic, simulate_traffic)
 from .ports import PipelineParams, PortModel, U, Uop
 from .sim import (SimProgram, SimResult, compile_program, simulate,
                   simulate_kernel, simulate_many)
 
 __all__ = [
-    "AnalysisRequest", "AnalysisResult", "AnalysisService", "analyze",
-    "analyze_latency", "ArchRegistry", "as_database", "BenchRecord",
+    "AccessStream", "AnalysisRequest", "AnalysisResult",
+    "AnalysisService", "analyze", "analyze_latency", "ArchRegistry",
+    "as_database", "BenchRecord", "CacheLevel", "compose_ecm",
     "default_registry", "default_service", "dependency_edges",
-    "extract_kernel", "get_model", "parse_assembly", "Instruction",
-    "InstructionDB", "InstrForm", "E", "LatencyResult", "MachineModel",
-    "PipelineParams", "PortModel", "SimProgram", "SimResult", "U",
+    "EcmResult", "extract_kernel", "extract_streams", "get_model",
+    "parse_assembly", "Instruction", "InstructionDB", "InstrForm", "E",
+    "LatencyResult", "MachineModel", "MemoryHierarchy",
+    "PipelineParams", "PortModel", "predict_traffic", "SimProgram",
+    "SimResult", "simulate_traffic", "TrafficResult", "U",
     "UnknownArchError", "Uop", "compile_program", "simulate",
     "simulate_kernel", "simulate_many", "widen_double_pumped",
 ]

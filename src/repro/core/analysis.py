@@ -62,11 +62,15 @@ class AnalysisResult:
     lcd_cycles: float = 0.0               # loop-carried dependency bound
     latency_result: LatencyResult | None = None
     binding: str = "throughput"           # "throughput" | "latency"
-    #                                       | "simulation"
+    #                                       | "simulation" | "memory"
     # --- cycle-level simulation (mode="simulate" only) -----------------
     bound_sim: float = 0.0                # steady-state cy/asm-it; 0 = not
     #                                       simulated
     sim_result: object | None = None      # repro.core.sim.SimResult
+    # --- ECM memory-hierarchy composition (working_set= requests) ------
+    bound_ecm: float = 0.0                # max(in-core, T_nOL + transfers);
+    #                                       0 = not composed
+    ecm_result: object | None = None      # repro.core.mem.EcmResult
 
     @property
     def cycles_per_source_iteration(self) -> float:
@@ -77,6 +81,11 @@ class AnalysisResult:
     def sim_per_source_iteration(self) -> float:
         """The simulated bound per source iteration (0 if not simulated)."""
         return self.bound_sim / self.unroll_factor
+
+    @property
+    def ecm_per_source_iteration(self) -> float:
+        """The ECM-composed bound per source iteration (0 if no ECM)."""
+        return self.bound_ecm / self.unroll_factor
 
     @property
     def port_bound_per_source_iteration(self) -> float:
@@ -135,7 +144,14 @@ class AnalysisResult:
                 f"{unit}/asm-it"
                 + (f"   ({self.sim_result.bottleneck}-limited)"
                    if getattr(self.sim_result, "bottleneck", "") else ""))
-        rule = "simulation" if self.sim_result is not None \
+        if self.ecm_result is not None:
+            lines.append(
+                f"ECM composition: {self.bound_ecm:.{precision}f} {unit}"
+                f"/asm-it   {self.ecm_result.notation()}"
+                f"   (working set {self.ecm_result.working_set:.0f} B, "
+                f"{self.ecm_result.resident}-resident)")
+        rule = "ECM" if self.ecm_result is not None \
+            else "simulation" if self.sim_result is not None \
             else "max(port, LCD)"
         lines.append(
             f"Predicted: {self.predicted_cycles:.{precision}f} {unit}/asm-it"

@@ -15,6 +15,7 @@ import functools
 
 from ..database import E, InstrForm, InstructionDB
 from ..machine import MachineModel
+from ..mem.hierarchy import CacheLevel, MemoryHierarchy
 from ..ports import PipelineParams, PortModel, U
 
 SKYLAKE = PortModel(
@@ -221,6 +222,24 @@ def _skylake_forms() -> tuple[InstrForm, ...]:
     return tuple(ent)
 
 
+# Client Skylake memory hierarchy for the ECM backend (docs/ecm.md):
+# per-level link bandwidths in cycles per 64-byte cache line, in the
+# spirit of Kerncraft's SKL machine files (L1<->L2 one 64B line per
+# cycle, halved per level further out; write-allocate + write-back on
+# every cache level).  The L1 entry prices the L1<->register link,
+# which the in-core T_nOL term already covers.
+SKL_HIERARCHY = MemoryHierarchy(levels=(
+    CacheLevel("L1", 32 * 1024, ways=8, line_bytes=64,
+               load_bw=0.5, store_bw=1.0),
+    CacheLevel("L2", 256 * 1024, ways=4, line_bytes=64,
+               load_bw=1.0, store_bw=2.0),
+    CacheLevel("L3", 8 * 1024 * 1024, ways=16, line_bytes=64,
+               load_bw=2.0, store_bw=4.0),
+    CacheLevel("MEM", None, ways=1, line_bytes=64,
+               load_bw=6.0, store_bw=6.0),
+))
+
+
 @functools.lru_cache(maxsize=None)
 def build_skylake_model() -> MachineModel:
     """The Skylake machine as one declarative artifact: the ``SKYLAKE``
@@ -229,7 +248,7 @@ def build_skylake_model() -> MachineModel:
     :class:`~repro.core.arch.registry.ArchRegistry`."""
     return MachineModel.from_port_model(
         SKYLAKE, arch_id="skl", aliases=("skylake",),
-        forms=_skylake_forms())
+        forms=_skylake_forms(), hierarchy=SKL_HIERARCHY)
 
 
 def build_skylake_db() -> InstructionDB:

@@ -34,6 +34,18 @@ HBM_BW = 819e9          # bytes/s
 ICI_BW = 50e9           # bytes/s per link
 ICI_LINKS_PER_AXIS = 1  # conservative: one logical link per mesh axis
 HBM_PER_CHIP = 16 * 2**30
+VMEM_PER_CHIP = 128 * 2**20   # on-chip vector memory
+VMEM_BW = 22e12               # bytes/s (~VPU-datapath rate estimate)
+
+# memory levels for working-set-aware roofline pricing (docs/ecm.md):
+# innermost first, final level unbounded — the accelerator analogue of
+# MachineModel.hierarchy.  analyze_hlo(working_set=...) prices the
+# memory term with the innermost level that holds the working set.
+MEM_LEVELS = [
+    {"name": "vmem", "size": VMEM_PER_CHIP, "bw": VMEM_BW},
+    {"name": "hbm", "size": HBM_PER_CHIP, "bw": HBM_BW},
+    {"name": "host", "size": None, "bw": 64e9},   # PCIe/DMA spill
+]
 
 # transcendental / heavy elementwise weights (VPU cycles per element,
 # relative to one FMA) — the analogue of the x86 divider-pipe entries
@@ -56,6 +68,7 @@ CONSTANTS = {
     "ici_links_per_axis": ICI_LINKS_PER_AXIS,
     "hbm_per_chip": HBM_PER_CHIP,
     "vpu_op_weight": VPU_OP_WEIGHT,
+    "mem_levels": MEM_LEVELS,
 }
 
 

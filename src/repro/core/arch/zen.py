@@ -20,6 +20,7 @@ import functools
 
 from ..database import E, InstrForm, InstructionDB, widen_double_pumped
 from ..machine import MachineModel
+from ..mem.hierarchy import CacheLevel, MemoryHierarchy
 from ..ports import PipelineParams, PortModel, U
 
 ZEN = PortModel(
@@ -193,6 +194,21 @@ def _zen_forms() -> tuple[InstrForm, ...]:
     return tuple(ent)
 
 
+# Zen (17h) memory hierarchy for the ECM backend (docs/ecm.md): 512 KiB
+# per-core L2, victim L3; link bandwidths in cycles per 64-byte line,
+# with a slower memory link than Skylake's (single-CCX client part).
+ZEN_HIERARCHY = MemoryHierarchy(levels=(
+    CacheLevel("L1", 32 * 1024, ways=8, line_bytes=64,
+               load_bw=0.5, store_bw=1.0),
+    CacheLevel("L2", 512 * 1024, ways=8, line_bytes=64,
+               load_bw=1.0, store_bw=2.0),
+    CacheLevel("L3", 8 * 1024 * 1024, ways=16, line_bytes=64,
+               load_bw=2.5, store_bw=5.0),
+    CacheLevel("MEM", None, ways=1, line_bytes=64,
+               load_bw=7.0, store_bw=7.0),
+))
+
+
 @functools.lru_cache(maxsize=None)
 def build_zen_model() -> MachineModel:
     """The Zen machine as one declarative artifact: the ``ZEN`` topology
@@ -201,7 +217,7 @@ def build_zen_model() -> MachineModel:
     :class:`~repro.core.arch.registry.ArchRegistry`."""
     return MachineModel.from_port_model(
         ZEN, arch_id="zen", aliases=("zen1", "znver1"),
-        forms=_zen_forms())
+        forms=_zen_forms(), hierarchy=ZEN_HIERARCHY)
 
 
 def build_zen_db() -> InstructionDB:

@@ -77,6 +77,18 @@ class AnalysisRequest:
             result then carries ``bound_sim``/``sim_result``, and
             ``predicted_cycles`` is the simulated steady state floored
             at the LCD bound).
+        working_set: total bytes the kernel streams over per repetition
+            of its outer loop.  ``None`` (default) keeps the paper's
+            infinite-L1 assumption.  A size, on an arch whose
+            :class:`~repro.core.machine.MachineModel` carries a
+            ``hierarchy`` block, composes the in-core bound with
+            per-level cache/memory transfer terms into an ECM
+            prediction (``AnalysisResult.bound_ecm`` /
+            ``ecm_result``, see docs/ecm.md); on a hierarchy-less
+            model the request behaves exactly like ``None``.
+        traffic_model: ``"analytic"`` (streaming/layer-condition miss
+            model, default) or ``"cachesim"`` (LRU set-associative
+            cache simulation of the access streams).
     """
 
     kernel: str | tuple[Instruction, ...]
@@ -86,6 +98,8 @@ class AnalysisRequest:
     latency_bound: bool = True
     syntax: str = "att"
     mode: str = "analytic"
+    working_set: float | None = None
+    traffic_model: str = "analytic"
 
 
 @dataclass
@@ -113,6 +127,8 @@ class ServiceStats:
     sim_group_dispatches: int = 0   # compiled batch dispatches issued by
     #                                 the sweep planner (one per
     #                                 machine-model group)
+    traffic_hits: int = 0    # memoized ECM traffic predictions
+    traffic_misses: int = 0
 
     def as_dict(self) -> dict[str, int]:
         return dict(vars(self))
@@ -120,7 +136,8 @@ class ServiceStats:
     def hit_rate(self, kind: str) -> float:
         """Hit rate in [0, 1] for one counter pair (``"result"``,
         ``"lookup"``, ``"lp"``, ``"hlo"``, ``"edge"``, ``"program"``,
-        ``"classify"`` or ``"machine"``); 0.0 when never exercised."""
+        ``"classify"``, ``"machine"`` or ``"traffic"``); 0.0 when
+        never exercised."""
         hits = getattr(self, f"{kind}_hits")
         misses = getattr(self, f"{kind}_misses")
         total = hits + misses
@@ -153,6 +170,7 @@ class AnalysisService:
         self._program_cache: dict[tuple, object] = {}   # SimProgram
         self._classify_cache: dict[tuple, str] = {}
         self._machine_cache: dict[str, MachineModel] = {}
+        self._traffic_cache: dict[tuple, tuple] = {}    # ECM traffic
         self._max_workers = max_workers
         #: batch-simulation driver for sweeps: "auto" | "numpy" | "jit"
         #: | "pallas" (see repro.core.sim.batch and docs/performance.md)
@@ -422,6 +440,7 @@ class AnalysisService:
             res = self._predict_simulated(request)
         else:
             res = self._compute_analytic(request)
+        res = self._apply_ecm(res, request)
         with self._lock:
             self._results[key] = res
         return res
@@ -430,10 +449,17 @@ class AnalysisService:
         if request.mode not in ("analytic", "simulate"):
             raise ValueError(f"unknown mode {request.mode!r} "
                              "(expected 'analytic' or 'simulate')")
+        if request.traffic_model not in ("analytic", "cachesim"):
+            raise ValueError(f"unknown traffic_model "
+                             f"{request.traffic_model!r} "
+                             "(expected 'analytic' or 'cachesim')")
+        if request.working_set is not None and request.working_set <= 0:
+            raise ValueError("working_set must be positive (bytes) or "
+                             "None")
         return (self._arch.resolve(request.arch),
                 self._kernel_id(request), request.scheduler,
                 request.unroll_factor, request.latency_bound,
-                request.mode)
+                request.mode, request.working_set, request.traffic_model)
 
     def _compute_analytic(self, request: AnalysisRequest
                           ) -> AnalysisResult:
@@ -502,9 +528,79 @@ class AnalysisService:
             binding = "simulation"
         else:
             binding = analytic.binding
+        # the analytic base may itself carry an ECM composition (its
+        # cache key includes working_set); the combined result is a pure
+        # in-core bound again — predict()/predict_batch re-apply ECM on
+        # top of the simulated bound afterwards
         return dataclasses.replace(
             analytic, bound_sim=bound_sim, sim_result=sim,
-            predicted_cycles=predicted, binding=binding)
+            predicted_cycles=predicted, binding=binding,
+            bound_ecm=0.0, ecm_result=None)
+
+    # ------------------------------------------------------------------
+    # ECM memory-hierarchy composition (working_set= requests)
+    # ------------------------------------------------------------------
+    def _traffic(self, request: AnalysisRequest, machine: MachineModel):
+        """Memoized per-level traffic + T_nOL for one (machine, kernel,
+        working_set, traffic_model) — the sim cache's sibling: its key
+        excludes scheduler/unroll/mode, so an ECM sweep across those
+        knobs predicts traffic once per working set."""
+        key = (machine.digest, self._kernel_id(request),
+               float(request.working_set), request.traffic_model)
+        with self._lock:
+            hit = self._traffic_cache.get(key)
+            if hit is not None:
+                self.stats.traffic_hits += 1
+                return hit
+            self.stats.traffic_misses += 1
+        from .mem import (extract_streams, memory_port_occupation,
+                          predict_traffic, simulate_traffic)
+        kernel = self._kernel_of(request)
+        streams = extract_streams(kernel)
+        estimator = simulate_traffic if request.traffic_model == \
+            "cachesim" else predict_traffic
+        traffic = estimator(streams, machine.hierarchy,
+                            float(request.working_set))
+        lookup = self._lookup_fn(request.arch)
+        entries = [lookup(ins) for ins in kernel]
+        t_nol = memory_port_occupation(
+            self.database(request.arch).model, entries)
+        out = (traffic, t_nol)
+        with self._lock:
+            self._traffic_cache[key] = out
+        return out
+
+    def _apply_ecm(self, res: AnalysisResult,
+                   request: AnalysisRequest) -> AnalysisResult:
+        """Compose the in-core result with the memory-hierarchy terms.
+
+        No-op when the request has no ``working_set`` or the machine
+        has no ``hierarchy`` block — the existing bounds pass through
+        bit-exactly (the documented compatibility guarantee).
+        """
+        if request.working_set is None:
+            return res
+        machine = self.resolve_machine(request.arch)
+        if machine.hierarchy is None:
+            return res
+        import dataclasses
+
+        from .mem import compose_ecm
+
+        traffic, t_nol = self._traffic(request, machine)
+        # T_nOL is by definition part of the in-core time: the uniform
+        # split of the memory uops alone can exceed the balanced overall
+        # bottleneck on asymmetric port sets, so clamp — this also makes
+        # working_set <= L1 reproduce the in-core bound bit-exactly.
+        if res.port_bound_cycles > 0:
+            t_nol = min(t_nol, res.port_bound_cycles)
+        ecm = compose_ecm(t_incore=res.predicted_cycles, t_nol=t_nol,
+                          traffic=traffic)
+        binding = "memory" if ecm.cycles > res.predicted_cycles + 1e-9 \
+            else res.binding
+        return dataclasses.replace(
+            res, bound_ecm=ecm.cycles, ecm_result=ecm,
+            predicted_cycles=ecm.cycles, binding=binding)
 
     def predict_batch(self, requests: Sequence[AnalysisRequest],
                       parallel: bool = False,
@@ -578,6 +674,8 @@ class AnalysisService:
         else:
             computed = [self._compute_analytic(r)
                         for r in analytic_todo.values()]
+        computed = [self._apply_ecm(res, r)
+                    for res, r in zip(computed, analytic_todo.values())]
         with self._lock:
             for k, res in zip(analytic_todo, computed):
                 self._results.setdefault(k, res)
@@ -628,7 +726,8 @@ class AnalysisService:
                     # single-request path
                     res = self.predict(req)
                 else:
-                    res = self._combine_sim(analytic, sim)
+                    res = self._apply_ecm(self._combine_sim(analytic, sim),
+                                          req)
                 with self._lock:
                     self._results.setdefault(k, res)
 
@@ -653,6 +752,8 @@ class AnalysisService:
               parallel: bool = False,
               mode: str = "analytic",
               backend: str | None = None,
+              working_set: float | None = None,
+              traffic_model: str = "analytic",
               ) -> dict[tuple[str, str, str], AnalysisResult]:
         """Full grid: ``{(kernel_name, arch, scheduler): AnalysisResult}``.
 
@@ -660,9 +761,14 @@ class AnalysisService:
         factor (default 1); ``mode="simulate"`` runs the whole grid
         through the cycle-level simulator backend, planned and
         dispatched in machine-model groups (see :meth:`predict_batch`;
-        ``backend`` picks the batch-simulation driver).  This is the
-        bulk entry point used by ``benchmarks/paper_tables.py``-style
-        sweeps.
+        ``backend`` picks the batch-simulation driver).
+        ``working_set`` / ``traffic_model`` apply the ECM
+        memory-hierarchy composition to every cell (see
+        :class:`AnalysisRequest`); the underlying analytic passes and
+        simulations are cached independently of the working set, so an
+        ECM sweep over an already-swept grid adds zero sim dispatches.
+        This is the bulk entry point used by
+        ``benchmarks/paper_tables.py``-style sweeps.
         """
         unroll_factors = unroll_factors or {}
         names, reqs = [], []
@@ -673,7 +779,8 @@ class AnalysisService:
                     reqs.append(AnalysisRequest(
                         kernel=kern, arch=arch, scheduler=sched,
                         unroll_factor=unroll_factors.get(name, 1),
-                        mode=mode))
+                        mode=mode, working_set=working_set,
+                        traffic_model=traffic_model))
         results = self.predict_batch(reqs, parallel=parallel,
                                      backend=backend)
         return dict(zip(names, results))
@@ -683,7 +790,8 @@ class AnalysisService:
     # ------------------------------------------------------------------
     def predict_hlo(self, text: str, *, ici_links: float = 1.0,
                     flop_dtype: str = "bf16", mode: str = "analytic",
-                    machine: "str | MachineModel | None" = None):
+                    machine: "str | MachineModel | None" = None,
+                    working_set: float | None = None):
         """Memoized :func:`repro.core.hlo.analyzer.analyze_hlo`.
 
         Results carry the combined ``max(overlap, critical-path)`` bound
@@ -693,7 +801,10 @@ class AnalysisService:
         ``terms.bound_sim``.  ``machine`` selects the accelerator model
         (an arch id/alias resolved through this service's registry, or a
         :class:`MachineModel` whose ``constants`` carry the hardware
-        numbers; default ``"tpu_v5e"``).  The cache key is the
+        numbers; default ``"tpu_v5e"``).  ``working_set`` selects the
+        memory level that prices the roofline memory term from the
+        model's ``constants["mem_levels"]`` table (``None`` keeps the
+        flat HBM assumption — see docs/ecm.md).  The cache key is the
         module-text digest plus the machine digest, so the serving
         dry-run and roofline sweeps share one pass per compiled program.
         """
@@ -702,7 +813,8 @@ class AnalysisService:
                              "(expected 'analytic' or 'simulate')")
         machine = self.resolve_machine(machine or "tpu_v5e")
         digest = hashlib.sha256(text.encode()).hexdigest()
-        key = (digest, ici_links, flop_dtype, mode, machine.digest)
+        key = (digest, ici_links, flop_dtype, mode, machine.digest,
+               working_set)
         with self._lock:
             hit = self._hlo_cache.get(key)
             if hit is not None:
@@ -711,7 +823,8 @@ class AnalysisService:
             self.stats.hlo_misses += 1
         from .hlo.analyzer import analyze_hlo
         res = analyze_hlo(text, ici_links=ici_links, flop_dtype=flop_dtype,
-                          simulate=(mode == "simulate"), machine=machine)
+                          simulate=(mode == "simulate"), machine=machine,
+                          working_set=working_set)
         with self._lock:
             self._hlo_cache[key] = res
         return res
@@ -721,6 +834,7 @@ class AnalysisService:
                           flop_dtype: str = "bf16",
                           mode: str = "analytic",
                           machine: "str | MachineModel | None" = None,
+                          working_set: float | None = None,
                           ) -> list:
         """Batched :meth:`predict_hlo` through the sweep planner's
         discipline: the machine model resolves *once* for the whole
@@ -735,7 +849,7 @@ class AnalysisService:
             if text not in out:
                 out[text] = self.predict_hlo(
                     text, ici_links=ici_links, flop_dtype=flop_dtype,
-                    mode=mode, machine=machine)
+                    mode=mode, machine=machine, working_set=working_set)
         return [out[text] for text in texts]
 
     # ------------------------------------------------------------------
@@ -751,6 +865,7 @@ class AnalysisService:
             self._program_cache.clear()
             self._classify_cache.clear()
             self._machine_cache.clear()
+            self._traffic_cache.clear()
             self.stats = ServiceStats()
 
 

@@ -98,6 +98,9 @@ class RooflineTerms:
     critical_path_s: float = 0.0
     # list-scheduled makespan (repro.core.sim.dag); 0.0 = not simulated
     sim_s: float = 0.0
+    # memory level that priced memory_s when a working_set was given
+    # ("" = the flat-HBM default, see docs/ecm.md)
+    mem_level: str = ""
 
     @property
     def dominant(self) -> str:
@@ -163,7 +166,9 @@ class HloAnalysis:
             f"(critical path)",
             f"  predicted {self.terms.bound_combined * 1e3:10.3f} ms "
             f"= max(overlap, chain)   [{self.terms.binding}-bound]",
-            f"  bottleneck: {self.terms.dominant}",
+            f"  bottleneck: {self.terms.dominant}"
+            + (f" (memory term priced at {self.terms.mem_level})"
+               if self.terms.mem_level else ""),
         ]
         if self.terms.sim_s > 0.0:
             lines.insert(-1, f"  scheduled {self.terms.sim_s * 1e3:10.3f}"
@@ -448,10 +453,26 @@ def _scheduled_seconds(mc: _ModuleCost, entry_name: str,
     return schedule_dag(nodes).makespan
 
 
+def _select_mem_level(constants: dict,
+                      working_set: float) -> tuple[str, float]:
+    """Innermost ``constants["mem_levels"]`` entry holding the working
+    set (a ``null`` size = unbounded), as ``(name, bytes/s)``.  Falls
+    back to the flat ``hbm_bw`` when the model declares no levels."""
+    levels = constants.get("mem_levels") or []
+    for lv in levels:
+        size = lv.get("size")
+        if size is None or working_set <= size:
+            return str(lv["name"]), float(lv["bw"])
+    if levels:                       # overflows even the last bounded level
+        return str(levels[-1]["name"]), float(levels[-1]["bw"])
+    return "", float(constants["hbm_bw"])
+
+
 def analyze_hlo(text: str, *, ici_links: float = 1.0,
                 flop_dtype: str = "bf16",
                 simulate: bool = False,
-                machine: "str | MachineModel | None" = None
+                machine: "str | MachineModel | None" = None,
+                working_set: float | None = None,
                 ) -> HloAnalysis:
     """Port-model analysis of a compiled HLO module.
 
@@ -460,7 +481,11 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
     ``constants`` carry ``peak_flops`` / ``vpu_flops`` / ``hbm_bw`` /
     ``ici_bw`` (default: the built-in ``"tpu_v5e"`` model), so a
     derived or JSON-loaded accelerator variant reprices the whole
-    analysis without code changes.
+    analysis without code changes.  ``working_set`` (bytes) selects the
+    memory level pricing the memory roofline term from the model's
+    ``constants["mem_levels"]`` table — the accelerator-side analogue
+    of ``AnalysisRequest.working_set`` (docs/ecm.md); ``None`` keeps
+    the flat-HBM assumption bit-exactly.
     """
     constants = None
     if machine is not None:
@@ -471,6 +496,11 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
         # single constant (the documented workflow) must not KeyError
         # on the ones it didn't touch
         constants = {**CONSTANTS, **machine.constants}
+    mem_level = ""
+    if working_set is not None:
+        constants = dict(CONSTANTS if constants is None else constants)
+        mem_level, bw = _select_mem_level(constants, working_set)
+        constants["hbm_bw"] = bw
     ops, entry_name = parse_module(text)
     mc = _ModuleCost(ops, constants)
 
@@ -514,7 +544,8 @@ def analyze_hlo(text: str, *, ici_links: float = 1.0,
             mc, entry_name, flop_dtype, ici_links, constants),
         sim_s=_scheduled_seconds(mc, entry_name, flop_dtype, ici_links,
                                  constants)
-        if simulate else 0.0)
+        if simulate else 0.0,
+        mem_level=mem_level)
     return HloAnalysis(
         terms=terms, flops=total.mxu_flops + total.vpu_flops,
         mxu_flops=total.mxu_flops,

@@ -45,6 +45,7 @@ from dataclasses import dataclass, field, fields, replace
 from typing import Iterable, Mapping, Sequence
 
 from .database import InstrForm, InstructionDB
+from .mem.hierarchy import MemoryHierarchy
 from .ports import PipelineParams, PortModel, Uop
 
 #: schema tag written into every serialized model / model file
@@ -136,6 +137,9 @@ class MachineModel:
     frequency_hz: float | None = None
     store_forward_latency: float = 0.0
     pipeline: PipelineParams | None = None
+    # memory hierarchy for ECM predictions (None = the paper's
+    # infinite-L1 assumption; every bound stays in-core)
+    hierarchy: MemoryHierarchy | None = None
     forms: tuple[InstrForm, ...] = ()     # the instruction-form table
     constants: Mapping[str, object] = field(default_factory=dict)
 
@@ -148,6 +152,15 @@ class MachineModel:
         for f in ("ports", "aliases", "divider_ports", "forms"):
             object.__setattr__(self, f, tuple(getattr(self, f)))
         object.__setattr__(self, "constants", _plain(dict(self.constants)))
+        # JSON derivation files pass hierarchy overrides as plain dicts
+        # through derive() -> replace(); coerce here so every path ends
+        # at the same frozen value
+        hz = self.hierarchy
+        if hz is not None and not isinstance(hz, MemoryHierarchy):
+            object.__setattr__(
+                self, "hierarchy",
+                MemoryHierarchy.from_dict(hz) if isinstance(hz, Mapping)
+                else MemoryHierarchy(levels=tuple(hz)))
         if not self.arch_id:
             raise ValueError("arch_id must be non-empty")
         if self.arch_id != self.arch_id.lower():
@@ -245,6 +258,8 @@ class MachineModel:
                 "mispredict_penalty":
                     float(self.pipeline.mispredict_penalty),
             },
+            "hierarchy": None if self.hierarchy is None
+            else self.hierarchy.to_dict(),
             "constants": _plain(self.constants),
             "forms": [_form_to_dict(f) for f in self.forms],
         }
@@ -287,6 +302,7 @@ class MachineModel:
                     pl.get("move_elimination", False)),
                 mispredict_penalty=float(
                     pl.get("mispredict_penalty", 0.0))),
+            hierarchy=data.get("hierarchy"),
             constants=dict(data.get("constants", {})),
             forms=tuple(_form_from_dict(f)
                         for f in data.get("forms", ())))
@@ -338,6 +354,7 @@ class MachineModel:
                         aliases: Sequence[str] = (),
                         forms: Sequence[InstrForm] = (),
                         constants: Mapping[str, object] | None = None,
+                        hierarchy: MemoryHierarchy | None = None,
                         ) -> "MachineModel":
         """Lift an existing :class:`PortModel` literal (single source of
         truth for the topology in the hand-written arch modules) into a
@@ -349,7 +366,8 @@ class MachineModel:
             store_hides_load=pm.store_hides_load, unit=pm.unit,
             frequency_hz=pm.frequency_hz,
             store_forward_latency=pm.store_forward_latency,
-            pipeline=pm.pipeline, forms=tuple(forms),
+            pipeline=pm.pipeline, hierarchy=hierarchy,
+            forms=tuple(forms),
             constants=dict(constants or {}))
         # preserve identity with the source literal (db.model is pm)
         model.__dict__["_port_model"] = pm

@@ -1,0 +1,22 @@
+"""Memory-hierarchy model: cache levels, access streams, traffic
+estimators (analytic + LRU cache simulator), and the ECM composition
+that fuses them with the in-core bounds.  See ``docs/ecm.md``."""
+from .cachesim import simulate_traffic
+from .ecm import EcmResult, compose_ecm, memory_port_occupation
+from .hierarchy import CacheLevel, MemoryHierarchy
+from .streams import AccessStream, extract_streams
+from .traffic import LevelTraffic, TrafficResult, predict_traffic
+
+__all__ = [
+    "AccessStream",
+    "CacheLevel",
+    "EcmResult",
+    "LevelTraffic",
+    "MemoryHierarchy",
+    "TrafficResult",
+    "compose_ecm",
+    "extract_streams",
+    "memory_port_occupation",
+    "predict_traffic",
+    "simulate_traffic",
+]

@@ -1,0 +1,86 @@
+"""ECM composition: in-core bounds + per-level transfer terms.
+
+Kerncraft's ECM model writes a kernel's cycles per iteration as
+
+    T_ECM = max(T_OL, T_nOL + T_L1L2 + T_L2L3 + T_L3Mem + ...)
+
+where ``T_OL`` is the in-core time that overlaps with data transfers
+(everything the existing analytic/simulated bounds already predict)
+and ``T_nOL`` is the non-overlapping part: the cycles the load/store
+ports are busy moving the kernel's data between L1 and the registers,
+which cannot hide behind cache transfers.  Here ``T_OL`` is the
+engine's existing in-core prediction (``max(port bound, LCD)`` or the
+pipeline-simulator bound), and ``T_nOL`` is the port occupation of the
+memory uops alone, computed by :func:`memory_port_occupation`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from .traffic import TrafficResult
+
+#: Uop kinds that occupy load/store ports (the T_nOL term).
+_MEMORY_KINDS = ("load", "store-agu", "store-data")
+
+
+@dataclass(frozen=True)
+class EcmResult:
+    """One ECM-composed prediction, cycles per assembly iteration."""
+
+    working_set: float
+    t_incore: float            # overlapping in-core term (T_OL)
+    t_nol: float               # non-overlapping L1<->register term
+    traffic: TrafficResult     # per-level transfer terms
+    cycles: float              # max(T_OL, T_nOL + sum(T_link))
+
+    @property
+    def resident(self) -> str:
+        return self.traffic.resident
+
+    @property
+    def transfer_cycles(self) -> float:
+        return self.traffic.transfer_cycles
+
+    def notation(self) -> str:
+        """Kerncraft-style ``{T_OL || T_nOL | T_L1L2 | ...}`` string."""
+        terms = " | ".join(f"{lv.cycles:.2f}" for lv in self.traffic.levels)
+        return (f"{{{self.t_incore:.2f} || {self.t_nol:.2f}"
+                + (f" | {terms}" if terms else "") + "}")
+
+
+def compose_ecm(*, t_incore: float, t_nol: float,
+                traffic: TrafficResult) -> EcmResult:
+    cycles = max(t_incore, t_nol + traffic.transfer_cycles)
+    return EcmResult(working_set=traffic.working_set,
+                     t_incore=t_incore, t_nol=t_nol,
+                     traffic=traffic, cycles=cycles)
+
+
+def memory_port_occupation(model, entries: Sequence) -> float:
+    """T_nOL: max per-port occupation of the memory uops alone.
+
+    Uses the same uniform split and hidden-load accounting as the
+    analytic scheduler, restricted to load/store uops.  Callers clamp
+    the result to the kernel's overall port bound: the uniform split
+    of the memory uops in isolation can exceed the balanced bound on
+    asymmetric port sets, and T_nOL is by definition a *part* of the
+    in-core time.
+    """
+    # Imported lazily: analysis -> machine -> mem would otherwise cycle.
+    from ..analysis import hidden_instruction_indices
+
+    hidden = hidden_instruction_indices(model, entries)
+    pressure: dict[str, float] = {}
+    for i, entry in enumerate(entries):
+        if entry is None:
+            continue
+        for uop in entry.uops:
+            if uop.kind not in _MEMORY_KINDS:
+                continue
+            if i in hidden and getattr(uop, "hideable_load", False):
+                continue
+            share = uop.cycles / len(uop.ports)
+            for port in uop.ports:
+                pressure[port] = pressure.get(port, 0.0) + share
+    return max(pressure.values(), default=0.0)

@@ -1,0 +1,178 @@
+"""Memory-hierarchy specification carried on :class:`MachineModel`.
+
+A :class:`MemoryHierarchy` is an ordered tuple of :class:`CacheLevel`
+entries, innermost (L1) first, outermost (main memory) last.  Each
+level prices the *link into it* — the cost, in core cycles per 64-byte
+cache line, of moving a line between this level and the next-inner one
+(Kerncraft's ``cy/CL`` convention).  The L1 entry's bandwidths describe
+the L1↔register link; that cost is already covered by the in-core
+``T_nOL`` port-occupation term, so only levels past the first
+contribute transfer cycles to the ECM sum.
+
+The outermost level models main memory: its ``size_bytes`` is ``None``
+(unbounded), so every working set is resident *somewhere* and
+``resident_level`` is total.
+
+Construction only coerces and sanity-checks types; semantic artifact
+validation (size ordering, positive bandwidths, line-size consistency)
+lives in :meth:`MemoryHierarchy.validate` so that
+``tools/check_models.py`` can report *all* defects of a shipped JSON
+artifact instead of dying on the first.
+"""
+from __future__ import annotations
+
+from collections.abc import Mapping
+from dataclasses import dataclass, field, fields
+
+
+@dataclass(frozen=True)
+class CacheLevel:
+    """One level of the memory hierarchy.
+
+    ``size_bytes=None`` marks the unbounded outermost level (DRAM).
+    ``load_bw`` / ``store_bw`` are cycles per cache line transferred
+    over the link between this level and the next-inner one.
+    ``write_allocate`` describes the *inner* side of that link: when
+    True, a store miss in the next-inner level first loads the line
+    from here (the classic write-allocate / write-back pair).
+    """
+
+    name: str
+    size_bytes: int | None
+    ways: int = 8
+    line_bytes: int = 64
+    load_bw: float = 1.0
+    store_bw: float = 1.0
+    write_allocate: bool = True
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("CacheLevel.name must be non-empty")
+        # Coerce JSON-borne numerics so from_dict(to_dict()) round-trips
+        # to equal (and equally hashed/digested) objects.
+        size = self.size_bytes
+        object.__setattr__(self, "size_bytes",
+                           None if size is None else int(size))
+        object.__setattr__(self, "ways", int(self.ways))
+        object.__setattr__(self, "line_bytes", int(self.line_bytes))
+        object.__setattr__(self, "load_bw", float(self.load_bw))
+        object.__setattr__(self, "store_bw", float(self.store_bw))
+        object.__setattr__(self, "write_allocate", bool(self.write_allocate))
+
+    @property
+    def bounded(self) -> bool:
+        return self.size_bytes is not None
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "size_bytes": self.size_bytes,
+            "ways": self.ways,
+            "line_bytes": self.line_bytes,
+            "load_bw": self.load_bw,
+            "store_bw": self.store_bw,
+            "write_allocate": self.write_allocate,
+        }
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "CacheLevel":
+        known = {f.name for f in fields(cls)}
+        bad = set(data) - known
+        if bad:
+            raise ValueError(f"unknown CacheLevel fields: {sorted(bad)}")
+        return cls(**dict(data))
+
+
+@dataclass(frozen=True)
+class MemoryHierarchy:
+    """Ordered cache levels, innermost first, unbounded memory last."""
+
+    levels: tuple[CacheLevel, ...] = field(default_factory=tuple)
+
+    def __post_init__(self) -> None:
+        coerced = tuple(
+            lv if isinstance(lv, CacheLevel)
+            else CacheLevel.from_dict(lv) if isinstance(lv, Mapping)
+            else CacheLevel(*lv)
+            for lv in self.levels)
+        object.__setattr__(self, "levels", coerced)
+        if not coerced:
+            raise ValueError("MemoryHierarchy needs at least one level")
+        names = [lv.name for lv in coerced]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate hierarchy level names: {names}")
+
+    # ---------------------------------------------------------- access
+    def resident_level(self, working_set: float) -> CacheLevel:
+        """Innermost level large enough to hold ``working_set`` bytes."""
+        for lv in self.levels:
+            if lv.size_bytes is None or working_set <= lv.size_bytes:
+                return lv
+        return self.levels[-1]
+
+    def active_links(self, working_set: float) -> tuple[int, ...]:
+        """Indices ``i`` of levels whose inbound link carries traffic:
+        the working set overflows every level inner to ``i``."""
+        out = []
+        for i in range(1, len(self.levels)):
+            inner = self.levels[i - 1]
+            if inner.size_bytes is not None and working_set > inner.size_bytes:
+                out.append(i)
+        return tuple(out)
+
+    # --------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"levels": [lv.to_dict() for lv in self.levels]}
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "MemoryHierarchy":
+        bad = set(data) - {"levels"}
+        if bad:
+            raise ValueError(f"unknown MemoryHierarchy fields: {sorted(bad)}")
+        return cls(levels=tuple(data.get("levels", ())))
+
+    # ------------------------------------------------------ validation
+    def validate(self) -> list[str]:
+        """Semantic artifact checks; returns human-readable defects.
+
+        Kept out of ``__post_init__`` so ``tools/check_models.py`` can
+        enumerate every problem of a malformed shipped JSON artifact.
+        """
+        errors: list[str] = []
+        levels = self.levels
+        if levels[-1].size_bytes is not None:
+            errors.append(
+                f"last level {levels[-1].name!r} must be unbounded "
+                "(size_bytes=None) to model main memory")
+        lines = {lv.line_bytes for lv in levels}
+        if len(lines) > 1:
+            errors.append(f"inconsistent line sizes across levels: "
+                          f"{sorted(lines)}")
+        prev_size = 0
+        for i, lv in enumerate(levels):
+            if lv.load_bw <= 0 or lv.store_bw <= 0:
+                errors.append(f"level {lv.name!r}: bandwidths must be "
+                              f"positive (load_bw={lv.load_bw}, "
+                              f"store_bw={lv.store_bw})")
+            if lv.line_bytes <= 0:
+                errors.append(f"level {lv.name!r}: line_bytes must be "
+                              "positive")
+            if lv.size_bytes is None:
+                if i != len(levels) - 1:
+                    errors.append(f"unbounded level {lv.name!r} must be "
+                                  "the outermost level")
+                continue
+            if lv.size_bytes <= prev_size:
+                errors.append(f"level {lv.name!r}: size_bytes="
+                              f"{lv.size_bytes} not strictly larger than "
+                              f"the inner level ({prev_size})")
+            if lv.ways < 1:
+                errors.append(f"level {lv.name!r}: ways must be >= 1")
+            elif lv.line_bytes > 0 and \
+                    lv.size_bytes % (lv.line_bytes * lv.ways):
+                errors.append(f"level {lv.name!r}: size_bytes="
+                              f"{lv.size_bytes} not divisible by "
+                              f"line_bytes*ways="
+                              f"{lv.line_bytes * lv.ways}")
+            prev_size = lv.size_bytes
+        return errors

@@ -1,0 +1,131 @@
+"""Access-stream extraction from a parsed kernel.
+
+The memory model needs to know, per assembly-loop iteration, which
+array-like streams the kernel walks and at what byte stride.  Streams
+are recovered statically, the same way the latency analyzer recovers
+loop-carried dependencies: induction registers are identified from
+``add``/``sub``/``inc``/``dec`` instructions with an immediate operand,
+and every memory operand is grouped by its canonical
+``(base, index, scale)`` address expression.  Distinct displacements
+off the same expression (an unrolled body touching ``0(%r13,%rax)``,
+``32(%r13,%rax)``, …) are one stream with several accesses.
+
+A stream whose address does not advance per iteration (e.g. the
+``(%rsp)`` scalar spill in the paper's ``pi -O1`` kernel) has stride 0
+and generates no cache traffic: it stays resident in L1 regardless of
+the working-set size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from ..isa import Instruction, register_class
+
+#: Bytes accessed per register class (width of the data operand).
+_CLASS_WIDTH = {"zmm": 64, "ymm": 32, "xmm": 16,
+                "r64": 8, "r32": 4, "r16": 2, "r8": 1}
+
+#: Mnemonic prefixes whose memory *destination* is written without
+#: being read first (plain stores).  Anything else with a memory
+#: destination is treated as read-modify-write (load + store).
+_STORE_ONLY_PREFIXES = ("mov", "vmov")
+
+
+@dataclass(frozen=True)
+class AccessStream:
+    """One array-like access stream of the kernel body."""
+
+    base: str | None
+    index: str | None
+    scale: int
+    stride: float          # bytes advanced per assembly iteration
+    width: int             # bytes per individual access
+    n_accesses: int        # distinct displacements per iteration
+    has_load: bool
+    has_store: bool
+
+    @property
+    def key(self) -> tuple:
+        return (self.base, self.index, self.scale)
+
+    def lines_per_iteration(self, line_bytes: int) -> float:
+        """Cache lines newly touched per assembly iteration.
+
+        Dense streams (stride <= bytes spanned by the iteration's
+        accesses) share lines across iterations: stride/line lines per
+        iteration.  Sparse streams open at most one fresh line per
+        access.  ``min(stride, n_accesses * line)`` covers both.
+        """
+        if self.stride <= 0:
+            return 0.0
+        return min(self.stride, self.n_accesses * line_bytes) / line_bytes
+
+
+def _canon(reg: str) -> str:
+    # Imported lazily: latency -> machine -> mem would otherwise cycle.
+    from ..latency import _canon_reg
+    return _canon_reg(reg)
+
+
+def _induction_deltas(kernel: Sequence[Instruction]) -> dict[str, int]:
+    """Per-iteration byte delta of every register the loop increments."""
+    deltas: dict[str, int] = {}
+    for ins in kernel:
+        if not ins.operands or ins.operands[0].kind != "reg":
+            continue
+        reg = _canon(ins.operands[0].reg or "")
+        if ins.mnemonic in ("inc", "dec"):
+            deltas[reg] = deltas.get(reg, 0) + (1 if ins.mnemonic == "inc"
+                                                else -1)
+        elif ins.mnemonic in ("add", "sub") and len(ins.operands) > 1 \
+                and ins.operands[1].kind == "imm":
+            try:
+                imm = int(ins.operands[1].text.lstrip("$"), 0)
+            except ValueError:
+                continue
+            deltas[reg] = deltas.get(reg, 0) + \
+                (imm if ins.mnemonic == "add" else -imm)
+    return deltas
+
+
+def _operand_width(ins: Instruction) -> int:
+    width = 0
+    for op in ins.operands:
+        if op.kind == "reg" and op.reg:
+            width = max(width, _CLASS_WIDTH.get(register_class(op.reg), 0))
+    return width or 8
+
+
+def extract_streams(kernel: Sequence[Instruction]) -> tuple[AccessStream, ...]:
+    """Group the kernel's memory operands into per-iteration streams."""
+    deltas = _induction_deltas(kernel)
+    groups: dict[tuple, dict] = {}
+    for ins in kernel:
+        if ins.mnemonic == "lea":          # address arithmetic, no access
+            continue
+        for pos, op in enumerate(ins.operands):
+            if op.kind != "mem" or not (op.base or op.index):
+                continue
+            is_store = pos == 0
+            is_load = (not is_store) or \
+                not ins.mnemonic.startswith(_STORE_ONLY_PREFIXES)
+            base = _canon(op.base) if op.base else None
+            index = _canon(op.index) if op.index else None
+            key = (base, index, op.scale)
+            g = groups.setdefault(key, {"disps": set(), "width": 0,
+                                        "load": False, "store": False})
+            g["disps"].add(op.displacement)
+            g["width"] = max(g["width"], _operand_width(ins))
+            g["load"] = g["load"] or is_load
+            g["store"] = g["store"] or is_store
+    streams = []
+    for (base, index, scale), g in sorted(
+            groups.items(), key=lambda kv: (str(kv[0][0]), str(kv[0][1]),
+                                            kv[0][2])):
+        stride = deltas.get(base or "", 0) + deltas.get(index or "", 0) * scale
+        streams.append(AccessStream(
+            base=base, index=index, scale=scale, stride=float(abs(stride)),
+            width=g["width"], n_accesses=len(g["disps"]),
+            has_load=g["load"], has_store=g["store"]))
+    return tuple(streams)

@@ -1,0 +1,79 @@
+"""Analytic per-level traffic prediction (streaming / layer-condition).
+
+Given the kernel's access streams, a :class:`MemoryHierarchy`, and the
+working-set size, predict the cache-line traffic crossing each
+inter-level link per assembly-loop iteration, and price it with the
+level bandwidths.  The model is the classic streaming one used by
+Kerncraft's layer-condition analysis in its "no reuse between levels"
+regime: a link carries a stream's lines iff the combined working set
+overflows every level inner to the link.
+
+Write-allocate is honoured: on a link whose inner level allocates on
+write, every stored line is first loaded (allocate) and later written
+back, so store streams contribute to both directions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from .hierarchy import MemoryHierarchy
+from .streams import AccessStream
+
+
+@dataclass(frozen=True)
+class LevelTraffic:
+    """Traffic over the link into one hierarchy level, per asm iteration."""
+
+    level: str
+    load_lines: float
+    store_lines: float
+    load_cycles: float
+    store_cycles: float
+
+    @property
+    def cycles(self) -> float:
+        return self.load_cycles + self.store_cycles
+
+
+@dataclass(frozen=True)
+class TrafficResult:
+    """Per-link traffic for one (kernel, hierarchy, working set)."""
+
+    working_set: float
+    resident: str              # innermost level holding the working set
+    estimator: str             # "analytic" | "cachesim"
+    levels: tuple[LevelTraffic, ...]
+
+    @property
+    def transfer_cycles(self) -> float:
+        return sum(lv.cycles for lv in self.levels)
+
+
+def predict_traffic(streams: Sequence[AccessStream],
+                    hierarchy: MemoryHierarchy,
+                    working_set: float,
+                    ) -> TrafficResult:
+    """Streaming-model traffic: every active link sees every stream."""
+    rows = []
+    active = set(hierarchy.active_links(working_set))
+    for i in range(1, len(hierarchy.levels)):
+        outer = hierarchy.levels[i]
+        inner = hierarchy.levels[i - 1]
+        load_lines = store_lines = 0.0
+        if i in active:
+            for s in streams:
+                lines = s.lines_per_iteration(inner.line_bytes)
+                if s.has_load or (s.has_store and inner.write_allocate):
+                    load_lines += lines
+                if s.has_store:
+                    store_lines += lines
+        rows.append(LevelTraffic(
+            level=outer.name,
+            load_lines=load_lines, store_lines=store_lines,
+            load_cycles=load_lines * outer.load_bw,
+            store_cycles=store_lines * outer.store_bw))
+    return TrafficResult(
+        working_set=float(working_set),
+        resident=hierarchy.resident_level(working_set).name,
+        estimator="analytic", levels=tuple(rows))

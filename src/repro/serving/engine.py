@@ -91,7 +91,8 @@ class ServingEngine:
     # ------------------------------------------------------------ #
     def dryrun_estimate(self, prompt_len: int = 128,
                         service=None, mode: str = "analytic",
-                        machine=None) -> dict:
+                        machine=None,
+                        working_set: float | None = None) -> dict:
         """Static port-model latency estimate of this engine's serving
         path — no execution, just lower/compile + the unified analysis.
 
@@ -128,7 +129,8 @@ class ServingEngine:
         # one batched call: the machine model resolves once (memoized on
         # the service) instead of once per phase per sweep point
         prefill, decode = service.predict_hlo_batch(
-            [prefill_txt, decode_txt], mode=mode, machine=machine)
+            [prefill_txt, decode_txt], mode=mode, machine=machine,
+            working_set=working_set)
         prefill_s = prefill.terms.bound_sim if mode == "simulate" \
             else prefill.terms.bound_combined
         decode_s = decode.terms.bound_sim if mode == "simulate" \

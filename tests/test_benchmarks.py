@@ -9,7 +9,7 @@ from benchmarks import paper_tables
 
 @pytest.mark.parametrize("table", ["table1", "table2", "table4",
                                    "table5", "table6", "table7",
-                                   "fma_example", "registry"])
+                                   "fma_example", "ecm", "registry"])
 def test_paper_table_matches(table):
     rows = paper_tables.ALL_TABLES[table]()
     assert rows
@@ -50,6 +50,24 @@ def test_simulator_table_covers_both_archs_and_converges():
         assert r["sim_cy_it"] > 0
     for name in ("simulator/triad_zen_O3", "simulator/pi_skl_O1"):
         assert abs(rows[name]["rel_to_analytic"]) <= 0.15, rows[name]
+
+
+def test_roofline_constants_single_sourced():
+    """Regression for the constants overlap: ``benchmarks/roofline.py``
+    must price with the registry's machine-model artifact — the same
+    numbers the HLO analyzer and the ``tpu_v5e`` module export — so the
+    report cannot drift from the prediction path."""
+    from benchmarks import roofline
+    from repro.core.arch import tpu_v5e
+    from repro.core.arch.registry import get_model
+
+    constants = get_model("tpu_v5e").constants
+    assert roofline.PEAK == constants["peak_flops"]["bf16"] \
+        == tpu_v5e.PEAK_FLOPS["bf16"]
+    assert roofline.HBM_BW == constants["hbm_bw"] == tpu_v5e.HBM_BW
+    # the working-set level table ships with the model too (docs/ecm.md)
+    assert constants["mem_levels"] == tpu_v5e.MEM_LEVELS
+    assert constants["mem_levels"][-1]["size"] is None
 
 
 @pytest.mark.skipif(

@@ -1,0 +1,186 @@
+"""Golden-table regression suite for the ECM memory-hierarchy table.
+
+``benchmarks.paper_tables.ecm_table`` runs every paper kernel through
+the ECM composer at a working set resident in each level of the shipped
+SKL/Zen cache hierarchies (L1/L2/L3/MEM).  This module pins the whole
+table against committed golden values: any change to the stream
+extractor, the traffic model, the hierarchy constants, or the T_nOL
+port-occupation rule that moves a paper-kernel prediction shows up here
+as an explicit diff, not as silent drift.
+
+Two structural invariants ride along: an L1-resident working set must
+reproduce the in-core prediction bit-exactly (the paper's infinite-L1
+assumption recovered), and predictions must grow monotonically as the
+working set climbs the hierarchy.
+
+On mismatch the failing rows are also written to a machine-readable
+diff file (``ECM_GOLDEN_DIFF_PATH``, default ``ecm-golden-diff.json``
+in the repo root) which CI uploads as an artifact.
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from benchmarks import paper_tables
+
+# ------------------------------------------------------------------ #
+# The golden table.  ``ecm_cy_it`` is per *source* iteration; the ECM
+# notation strings are per assembly iteration,
+# {T_OL || T_nOL | T_L1L2 | T_L2L3 | T_L3Mem}.  Regenerate with
+#   PYTHONPATH=src:. python -c \
+#     "from benchmarks.paper_tables import ecm_table; \
+#      [print(r) for r in ecm_table()]"
+# and update ONLY when a change to the model is intended and understood.
+# ------------------------------------------------------------------ #
+GOLDEN = {
+    #                       ecm_cy_it  transfer  binding
+    "triad_skl_O3@L1":  (0.500, 0.00, "throughput"),
+    "triad_skl_O3@L2":  (1.250, 3.00, "memory"),
+    "triad_skl_O3@L3":  (2.750, 9.00, "memory"),
+    "triad_skl_O3@MEM": (6.500, 24.00, "memory"),
+    "triad_zen_O3@L1":  (1.000, 0.00, "throughput"),
+    "triad_zen_O3@L2":  (1.750, 1.50, "memory"),
+    "triad_zen_O3@L3":  (3.625, 5.25, "memory"),
+    "triad_zen_O3@MEM": (8.000, 14.00, "memory"),
+    # the pi kernels accumulate in registers; their only memory operand
+    # is a stride-0 (%rsp) scalar that stays L1-resident at any working
+    # set, so the ECM bound collapses to the in-core bound at all levels
+    "pi_skl_O1@L1":  (9.000, 0.00, "latency"),
+    "pi_skl_O1@L2":  (9.000, 0.00, "latency"),
+    "pi_skl_O1@L3":  (9.000, 0.00, "latency"),
+    "pi_skl_O1@MEM": (9.000, 0.00, "latency"),
+    "pi_skl_O2@L1":  (4.250, 0.00, "throughput"),
+    "pi_skl_O2@L2":  (4.250, 0.00, "throughput"),
+    "pi_skl_O2@L3":  (4.250, 0.00, "throughput"),
+    "pi_skl_O2@MEM": (4.250, 0.00, "throughput"),
+    "pi_skl_O3@L1":  (2.000, 0.00, "throughput"),
+    "pi_skl_O3@L2":  (2.000, 0.00, "throughput"),
+    "pi_skl_O3@L3":  (2.000, 0.00, "throughput"),
+    "pi_skl_O3@MEM": (2.000, 0.00, "throughput"),
+    "pi_zen_O1@L1":  (11.500, 0.00, "latency"),
+    "pi_zen_O1@L2":  (11.500, 0.00, "latency"),
+    "pi_zen_O1@L3":  (11.500, 0.00, "latency"),
+    "pi_zen_O1@MEM": (11.500, 0.00, "latency"),
+    "pi_zen_O2@L1":  (4.000, 0.00, "throughput"),
+    "pi_zen_O2@L2":  (4.000, 0.00, "throughput"),
+    "pi_zen_O2@L3":  (4.000, 0.00, "throughput"),
+    "pi_zen_O2@MEM": (4.000, 0.00, "throughput"),
+    "pi_zen_O3@L1":  (2.000, 0.00, "throughput"),
+    "pi_zen_O3@L2":  (2.000, 0.00, "throughput"),
+    "pi_zen_O3@L3":  (2.000, 0.00, "throughput"),
+    "pi_zen_O3@MEM": (2.000, 0.00, "throughput"),
+}
+
+# full ECM notations pinned for the memory-resident triads — the one
+# place every per-link term is live (per assembly iteration)
+GOLDEN_NOTATION = {
+    "triad_skl_O3@MEM": "{2.00 || 2.00 | 3.00 | 6.00 | 15.00}",
+    "triad_zen_O3@MEM": "{2.00 || 2.00 | 1.50 | 3.75 | 8.75}",
+}
+
+ABS_TOL = 1e-9
+LEVELS = ("L1", "L2", "L3", "MEM")
+
+
+def _diff_path() -> Path:
+    root = Path(__file__).resolve().parent.parent
+    return Path(os.environ.get("ECM_GOLDEN_DIFF_PATH",
+                               root / "ecm-golden-diff.json"))
+
+
+@pytest.fixture(scope="module")
+def ecm_rows():
+    rows = {r["name"].split("/", 1)[1]: r
+            for r in paper_tables.ecm_table()}
+    yield rows
+
+
+def _check_rows(rows):
+    """Compare against GOLDEN; return the list of mismatch records."""
+    diffs = []
+    for name, (ecm, transfer, binding) in GOLDEN.items():
+        row = rows.get(name)
+        if row is None:
+            diffs.append({"kernel": name, "field": "row",
+                          "expected": "present", "got": "missing"})
+            continue
+        checks = [
+            ("ecm_cy_it", ecm, row["ecm_cy_it"]),
+            ("transfer_cy", transfer, row["transfer_cy"]),
+            ("binding", binding, row["binding"]),
+            ("resident", name.split("@", 1)[1], row["resident"]),
+        ]
+        if name in GOLDEN_NOTATION:
+            checks.append(("notation", GOLDEN_NOTATION[name],
+                           row["notation"]))
+        for field, exp, got in checks:
+            equal = (abs(got - exp) <= ABS_TOL
+                     if isinstance(exp, float) else got == exp)
+            if not equal:
+                diffs.append({"kernel": name, "field": field,
+                              "expected": exp, "got": got})
+    return diffs
+
+
+def test_ecm_table_matches_golden(ecm_rows):
+    assert set(ecm_rows) == set(GOLDEN), (
+        "kernel x level set drifted vs golden table")
+    diffs = _check_rows(ecm_rows)
+    if diffs:
+        path = _diff_path()
+        path.write_text(json.dumps(
+            {"golden": {k: list(v) for k, v in GOLDEN.items()},
+             "diffs": diffs}, indent=2) + "\n", encoding="utf-8")
+        pytest.fail(f"{len(diffs)} ECM golden mismatch(es), diff "
+                    f"written to {path}:\n"
+                    + "\n".join(f"  {d['kernel']}.{d['field']}: expected "
+                                f"{d['expected']!r}, got {d['got']!r}"
+                                for d in diffs))
+
+
+def test_l1_resident_recovers_in_core_prediction(ecm_rows):
+    """Working set inside L1 ⇒ the ECM bound IS the in-core bound: the
+    model degrades to the paper's infinite-L1 assumption bit-exactly."""
+    for name, row in ecm_rows.items():
+        if not name.endswith("@L1"):
+            continue
+        assert row["transfer_cy"] == 0.0, name
+        assert row["ecm_cy_it"] * 1.0 == pytest.approx(
+            row["incore_cy"] / _unroll(name), abs=0), name
+        assert row["binding"] != "memory", name
+
+
+def test_predictions_monotone_in_working_set(ecm_rows):
+    """Climbing the hierarchy can only add transfer cycles — the ECM
+    prediction is non-decreasing in the working set."""
+    kernels = {n.split("@", 1)[0] for n in ecm_rows}
+    for kernel in kernels:
+        seq = [ecm_rows[f"{kernel}@{lv}"]["ecm_cy_it"] for lv in LEVELS]
+        assert seq == sorted(seq), (kernel, seq)
+
+
+def test_memory_binds_the_cache_resident_triads(ecm_rows):
+    """Beyond L1 the triads are data-transfer bound on both archs; the
+    register-resident pi kernels never are."""
+    for arch in ("skl", "zen"):
+        for lv in ("L2", "L3", "MEM"):
+            assert ecm_rows[f"triad_{arch}_O3@{lv}"]["binding"] \
+                == "memory"
+    assert all(r["binding"] != "memory" for n, r in ecm_rows.items()
+               if n.startswith("pi_"))
+
+
+def _unroll(name: str) -> int:
+    kernel = name.split("@", 1)[0]
+    return paper_tables.KERNEL_CASES[kernel][2]
+
+
+def test_no_stale_diff_artifact_on_success(ecm_rows):
+    """A green run must not leave a stale diff file behind (CI only
+    uploads it on failure, but a leftover from a previous red run would
+    be misleading)."""
+    if not _check_rows(ecm_rows) and _diff_path().exists():
+        _diff_path().unlink()
+    assert not (_check_rows(ecm_rows) and not _diff_path().exists())

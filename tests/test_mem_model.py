@@ -1,0 +1,370 @@
+"""Property and unit tests for the ECM memory-hierarchy backend.
+
+Covers the four layers of ``repro.core.mem``:
+
+* stream extraction from parsed kernels (strides, widths, load/store
+  classification, the stride-0 scalar-spill case),
+* the two interchangeable traffic estimators — the analytic
+  layer-condition/streaming model and the LRU set-associative cache
+  simulator — which must agree within 5% on randomized streaming
+  patterns (hypothesis),
+* the ECM composition through the engine: ``working_set <= L1`` must
+  reproduce every in-core bound *bit-exactly* under both estimators,
+  and predictions must be monotone in the working set,
+* ``MachineModel`` integration: hierarchy serialization round-trips,
+  ``derive`` preserves it, the digest keys on it, and
+  ``tools/check_models.py`` enumerates malformed hierarchy artifacts.
+"""
+import importlib.util
+from pathlib import Path
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional [dev] dependency
+    from repro.testing import given, settings, st
+
+from repro.core import (AnalysisRequest, AnalysisService, MachineModel,
+                        default_service, extract_kernel, get_model,
+                        parse_assembly)
+from repro.core import paper_kernels as pk
+from repro.core.mem import (AccessStream, CacheLevel, MemoryHierarchy,
+                            compose_ecm, extract_streams, predict_traffic,
+                            simulate_traffic)
+
+SERVICE = default_service()
+
+# small toy hierarchy so the cache simulator's measuring pass is cheap
+TOY_HZ = MemoryHierarchy(levels=(
+    CacheLevel("L1", 4096, ways=4, load_bw=0.5, store_bw=1.0),
+    CacheLevel("L2", 16384, ways=8, load_bw=1.0, store_bw=2.0),
+    CacheLevel("MEM", None, ways=1, load_bw=4.0, store_bw=4.0),
+))
+
+PAPER_CASES = (
+    ("skl", pk.TRIAD_SKL_O3, 4), ("zen", pk.TRIAD_ZEN_O3, 2),
+    ("skl", pk.PI_O1, 1), ("skl", pk.PI_O2, 1), ("skl", pk.PI_SKL_O3, 8),
+    ("zen", pk.PI_O1, 1), ("zen", pk.PI_O2, 1), ("zen", pk.PI_ZEN_O3, 2),
+)
+
+
+# ------------------------------------------------------------------ #
+# stream extraction
+# ------------------------------------------------------------------ #
+def test_triad_skl_streams():
+    """The -O3 SKL triad walks four ymm streams at 32 B/iteration:
+    three loads (b, c, d) and one store (a)."""
+    kernel = extract_kernel(pk.TRIAD_SKL_O3)
+    streams = extract_streams(kernel)
+    assert len(streams) == 4
+    assert all(s.stride == 32.0 and s.width == 32 for s in streams)
+    assert sum(s.has_store for s in streams) == 1
+    assert sum(s.has_load and not s.has_store for s in streams) == 3
+
+
+def test_pi_o1_scalar_spill_is_stride_zero():
+    """pi -O1 keeps the accumulator in a (%rsp) slot: one read-modify-
+    write stream that never advances — no cache traffic at any level."""
+    kernel = extract_kernel(pk.PI_O1)
+    streams = extract_streams(kernel)
+    assert any(s.stride == 0.0 and s.has_load and s.has_store
+               for s in streams)
+    assert all(s.lines_per_iteration(64) == 0.0 for s in streams
+               if s.stride == 0.0)
+
+
+def test_store_vs_rmw_classification():
+    """A mov-family memory destination is a plain store; any other
+    memory destination is read-modify-write (load + store)."""
+    plain = extract_streams(parse_assembly(
+        "vmovapd %ymm0, (%r14)\nadd $32, %r14"))
+    assert plain[0].has_store and not plain[0].has_load
+    rmw = extract_streams(parse_assembly(
+        "addq $1, (%r14)\nadd $8, %r14"))
+    assert rmw[0].has_store and rmw[0].has_load
+
+
+def test_unrolled_displacements_are_one_stream():
+    """Distinct displacements off one (base, index, scale) expression
+    are a single stream with several accesses per iteration."""
+    src = ("vmovapd (%r13), %ymm0\n"
+           "vmovapd 32(%r13), %ymm1\n"
+           "add $64, %r13")
+    streams = extract_streams(parse_assembly(src))
+    assert len(streams) == 1
+    assert streams[0].n_accesses == 2
+    assert streams[0].stride == 64.0
+    assert streams[0].lines_per_iteration(64) == 1.0
+
+
+def test_sparse_stream_opens_one_line_per_access():
+    """A stride past the span of its accesses touches at most
+    n_accesses fresh lines per iteration, not stride/line."""
+    s = AccessStream(base="r8", index=None, scale=1, stride=4096.0,
+                     width=8, n_accesses=1, has_load=True,
+                     has_store=False)
+    assert s.lines_per_iteration(64) == 1.0
+
+
+# ------------------------------------------------------------------ #
+# traffic estimators: analytic vs cache simulator
+# ------------------------------------------------------------------ #
+_stream_strategy = st.builds(
+    lambda i, width, n_acc, kind: AccessStream(
+        base=f"r{i}", index=None, scale=1,
+        stride=float(width * n_acc), width=width, n_accesses=n_acc,
+        has_load=kind in ("load", "both"),
+        has_store=kind in ("store", "both")),
+    st.integers(0, 7), st.sampled_from([8, 16, 32, 64]),
+    st.integers(1, 4), st.sampled_from(["load", "store", "both"]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(streams=st.lists(_stream_strategy, min_size=1, max_size=4,
+                        unique_by=lambda s: s.base),
+       working_set=st.sampled_from([2048.0, 8192.0, 65536.0]))
+def test_analytic_agrees_with_cachesim(streams, working_set):
+    """The acceptance criterion: on streaming patterns the analytic
+    layer-condition model and the LRU cache simulator agree within 5%
+    on total transfer cycles, and per-link within half a line."""
+    analytic = predict_traffic(tuple(streams), TOY_HZ, working_set)
+    sim = simulate_traffic(tuple(streams), TOY_HZ, working_set)
+    ta, ts = analytic.transfer_cycles, sim.transfer_cycles
+    assert analytic.resident == sim.resident
+    if ta == ts == 0.0:
+        return
+    assert abs(ta - ts) / max(ta, ts) <= 0.05, (ta, ts, streams)
+
+
+def test_estimators_bit_equal_on_the_paper_triads():
+    """On the actual paper kernels (pure unit-stride streaming) the two
+    estimators agree to the digit at every hierarchy level."""
+    for arch, src, unroll in (("skl", pk.TRIAD_SKL_O3, 4),
+                              ("zen", pk.TRIAD_ZEN_O3, 2)):
+        hz = get_model(arch).hierarchy
+        streams = extract_streams(parse_assembly(src))
+        for ws in (16e3, 128e3, 2e6, 64e6):
+            a = predict_traffic(streams, hz, ws)
+            s = simulate_traffic(streams, hz, ws)
+            assert a.transfer_cycles == pytest.approx(
+                s.transfer_cycles, abs=1e-9), (arch, ws)
+
+
+def test_write_allocate_doubles_store_stream_load_traffic():
+    """With write-allocate a store-only stream loads every line before
+    writing it back; without, it streams straight through."""
+    store = (AccessStream(base="r8", index=None, scale=1, stride=64.0,
+                          width=64, n_accesses=1, has_load=False,
+                          has_store=True),)
+    wa = predict_traffic(store, TOY_HZ, 8192.0)
+    assert wa.levels[0].load_lines == 1.0    # allocate
+    assert wa.levels[0].store_lines == 1.0   # write-back
+    no_wa = MemoryHierarchy(levels=(
+        CacheLevel("L1", 4096, ways=4, write_allocate=False),
+        CacheLevel("MEM", None, ways=1),
+    ))
+    nt = predict_traffic(store, no_wa, 8192.0)
+    assert nt.levels[0].load_lines == 0.0
+    assert nt.levels[0].store_lines == 1.0
+
+
+# ------------------------------------------------------------------ #
+# ECM composition through the engine
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("traffic_model", ["analytic", "cachesim"])
+@pytest.mark.parametrize("arch,src,unroll", PAPER_CASES)
+def test_l1_working_set_is_bit_exact(arch, src, unroll, traffic_model):
+    """working_set <= L1 ⇒ every existing bound is reproduced
+    bit-for-bit under both traffic estimators: the hierarchy model
+    degrades exactly to the paper's infinite-L1 assumption."""
+    base = SERVICE.predict(AnalysisRequest(
+        kernel=src, arch=arch, unroll_factor=unroll))
+    res = SERVICE.predict(AnalysisRequest(
+        kernel=src, arch=arch, unroll_factor=unroll,
+        working_set=16.0 * 1024, traffic_model=traffic_model))
+    assert res.predicted_cycles == base.predicted_cycles
+    assert res.port_bound_cycles == base.port_bound_cycles
+    assert res.lcd_cycles == base.lcd_cycles
+    assert res.port_totals == base.port_totals
+    assert res.binding == base.binding
+    assert res.ecm_result is not None
+    assert res.bound_ecm == base.predicted_cycles
+
+
+def test_hierarchy_less_machine_ignores_working_set():
+    """A model without a hierarchy (the paper's original assumption)
+    silently skips the ECM composition — same result, no ecm_result."""
+    svc = AnalysisService()
+    svc.register(get_model("skl").derive("skl-nohz", hierarchy=None))
+    res = svc.predict(AnalysisRequest(
+        kernel=pk.TRIAD_SKL_O3, arch="skl-nohz", unroll_factor=4,
+        working_set=64.0 * 2**20))
+    base = SERVICE.predict(AnalysisRequest(
+        kernel=pk.TRIAD_SKL_O3, arch="skl", unroll_factor=4))
+    assert res.ecm_result is None
+    assert res.bound_ecm == 0.0
+    assert res.predicted_cycles == base.predicted_cycles
+
+
+@settings(max_examples=25, deadline=None)
+@given(sets=st.lists(st.floats(1024.0, 256.0 * 2**20), min_size=2,
+                     max_size=6))
+def test_ecm_monotone_in_working_set(sets):
+    """Growing the working set can only add transfer terms: the ECM
+    prediction is non-decreasing in the working set (both archs)."""
+    for arch, src, unroll in (("skl", pk.TRIAD_SKL_O3, 4),
+                              ("zen", pk.TRIAD_ZEN_O3, 2)):
+        preds = [SERVICE.predict(AnalysisRequest(
+            kernel=src, arch=arch, unroll_factor=unroll,
+            working_set=ws)).bound_ecm for ws in sorted(sets)]
+        assert preds == sorted(preds), (arch, sets, preds)
+
+
+def test_ecm_sweep_shares_the_fast_path():
+    """``sweep(working_set=...)`` rides the planner fast path: the ECM
+    post-pass adds traffic-cache entries but zero extra sim dispatches
+    relative to the same sweep without a working set."""
+    svc = AnalysisService()
+    kernels = {"triad": pk.TRIAD_SKL_O3, "pi": pk.PI_O1}
+    svc.sweep(kernels, archs=("skl", "zen"), mode="simulate")
+    before = (svc.stats.sim_runs, svc.stats.sim_group_dispatches)
+    rows = svc.sweep(kernels, archs=("skl", "zen"), mode="simulate",
+                     working_set=64.0 * 2**20)
+    after = (svc.stats.sim_runs, svc.stats.sim_group_dispatches)
+    assert after == before
+    assert any(r.ecm_result is not None for r in rows.values())
+    # the triad cells carry live ECM terms; pi's spill stream does not
+    assert rows[("triad", "skl", "uniform")].binding == "memory"
+
+
+def test_invalid_requests_are_rejected():
+    with pytest.raises(ValueError):
+        SERVICE.predict(AnalysisRequest(
+            kernel=pk.PI_O1, arch="skl", working_set=-1.0))
+    with pytest.raises(ValueError):
+        SERVICE.predict(AnalysisRequest(
+            kernel=pk.PI_O1, arch="skl", working_set=1024.0,
+            traffic_model="psychic"))
+
+
+def test_compose_ecm_rule():
+    """cycles = max(T_incore, T_nOL + sum of link terms)."""
+    t = predict_traffic(
+        (AccessStream(base="r8", index=None, scale=1, stride=64.0,
+                      width=64, n_accesses=1, has_load=True,
+                      has_store=False),),
+        TOY_HZ, 65536.0)
+    ecm = compose_ecm(t_incore=2.0, t_nol=1.0, traffic=t)
+    assert ecm.cycles == max(2.0, 1.0 + t.transfer_cycles)
+    assert ecm.transfer_cycles == t.transfer_cycles
+    assert ecm.notation().startswith("{2.00 || 1.00 | ")
+
+
+# ------------------------------------------------------------------ #
+# MachineModel integration: serialization, derive, digest, validation
+# ------------------------------------------------------------------ #
+_level_sets = st.lists(st.integers(2, 4096), min_size=2, max_size=4,
+                       unique=True)
+_bw = st.floats(0.25, 8.0)
+
+
+@st.composite
+def _hierarchies(draw):
+    sets = sorted(draw(_level_sets))
+    levels = []
+    for i, n_sets in enumerate(sets[:-1]):
+        levels.append(CacheLevel(
+            name=f"L{i + 1}", size_bytes=64 * 8 * n_sets, ways=8,
+            load_bw=draw(_bw), store_bw=draw(_bw),
+            write_allocate=draw(st.booleans())))
+    levels.append(CacheLevel(name="MEM", size_bytes=None, ways=1,
+                             load_bw=draw(_bw), store_bw=draw(_bw)))
+    return MemoryHierarchy(levels=tuple(levels))
+
+
+@settings(max_examples=30, deadline=None)
+@given(hz=_hierarchies())
+def test_hierarchy_roundtrip_derive_digest(hz):
+    """Any valid hierarchy survives the MachineModel JSON round trip
+    bit-exactly (equal objects, equal digests) and rides through
+    ``derive`` untouched."""
+    assert hz.validate() == []
+    assert MemoryHierarchy.from_dict(hz.to_dict()) == hz
+    model = get_model("skl").derive("skl-hz", hierarchy=hz)
+    clone = MachineModel.from_json(model.to_json())
+    assert clone == model
+    assert clone.digest == model.digest
+    assert clone.hierarchy == hz
+    derived = model.derive("skl-hz2")
+    assert derived.hierarchy == hz
+    assert derived.digest != model.digest        # arch_id differs
+
+
+def test_digest_keys_on_the_hierarchy():
+    """Two models differing only in their hierarchy must not collide:
+    the digest is the distributed-cache key for ECM predictions."""
+    skl = get_model("skl")
+    assert skl.hierarchy is not None
+    stripped = skl.derive("skl-x", hierarchy=None)
+    changed = skl.derive(
+        "skl-x", hierarchy=MemoryHierarchy(levels=(
+            skl.hierarchy.levels[0],
+            skl.hierarchy.levels[-1])))
+    same = skl.derive("skl-x", hierarchy=skl.hierarchy)
+    assert len({stripped.digest, changed.digest, same.digest}) == 3
+
+
+def test_shipped_hierarchies_are_valid():
+    """Every registry model either has no hierarchy or a structurally
+    valid one (same checks tools/check_models.py runs in CI)."""
+    from repro.core import default_registry
+    for arch_id in default_registry().ids():
+        hz = get_model(arch_id).hierarchy
+        if hz is not None:
+            assert hz.validate() == [], arch_id
+
+
+def _load_check_models():
+    path = Path(__file__).resolve().parent.parent / "tools" / \
+        "check_models.py"
+    spec = importlib.util.spec_from_file_location("check_models_mem",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_models_enumerates_malformed_hierarchy():
+    """A malformed hierarchy artifact is reported defect-by-defect by
+    the CI model checker, not swallowed or crashed on."""
+    cm = _load_check_models()
+    bad = get_model("skl").derive("skl-bad", hierarchy=MemoryHierarchy(
+        levels=(
+            CacheLevel("L1", 32768, ways=8),
+            CacheLevel("L2", 16384, ways=8),          # shrinks
+            CacheLevel("L3", 65536, ways=8, load_bw=-1.0),  # bad bw
+            CacheLevel("MEM", 2 ** 30, ways=1),       # bounded last
+        )))
+    errors = []
+    cm.check_model(bad, "unit-test", errors)
+    text = "\n".join(errors)
+    assert "hierarchy" in text
+    assert "not strictly larger" in text
+    assert "bandwidths must be positive" in text
+    assert "must be unbounded" in text
+    good = get_model("skl")
+    ok_errors = []
+    cm.check_model(good, "unit-test", ok_errors)
+    assert ok_errors == []
+
+
+def test_hierarchy_construction_rejects_garbage():
+    with pytest.raises(ValueError):
+        MemoryHierarchy(levels=())
+    with pytest.raises(ValueError):
+        MemoryHierarchy(levels=(CacheLevel("L1", 1024),
+                                CacheLevel("L1", None)))
+    with pytest.raises(ValueError):
+        CacheLevel.from_dict({"name": "L1", "size_bytes": 1024,
+                              "surprise": 1})

@@ -69,6 +69,14 @@ def check_model(model: MachineModel, origin: str,
             errors.append(
                 f"{origin}: dsb_width and dsb_size must be enabled "
                 f"together (got {pl.dsb_width}/{pl.dsb_size})")
+    hz = model.hierarchy
+    if hz is not None:
+        # semantic hierarchy checks (level ordering by size, positive
+        # bandwidths, line-size consistency, unbounded last level) live
+        # on MemoryHierarchy.validate() so a malformed artifact reports
+        # every defect instead of failing construction on the first
+        for err in hz.validate():
+            errors.append(f"{origin}: hierarchy: {err}")
     clone = MachineModel.from_json(model.to_json())
     if clone != model:
         errors.append(f"{origin}: JSON round trip is not the identity")
