@@ -69,9 +69,39 @@ def main() -> None:
                     "cold_cells_per_s": sw["cold_cells_per_s"],
                     "warm_cells_per_s": sw["warm_cells_per_s"],
                     "group_dispatches": sw["group_dispatches"],
-                    "sim_runs": sw["sim_runs"],
-                    "edge_hit_rate": sw["hit_rates"]["edge"],
-                    "result_hit_rate": sw["hit_rates"]["result"]}))
+                    "sim_runs": sw["sim_runs"]}))
+        # the full ServiceStats.hit_rate() breakdown: a cache
+        # regression (cold programs, re-resolved machines, ...) shows
+        # up here in every bench run, not only in the --check gate
+        print(_csv({"name": "sweep_bench/cache_hit_rates",
+                    **{f"{k}_hit_rate": sw["hit_rates"][k]
+                       for k in ("result", "lookup", "lp", "edge",
+                                 "program", "classify", "machine")}}))
+
+    # ---- prediction-service load replay (docs/serving-service.md) ---
+    if args.skip_host:
+        print("service_bench/skipped,,run benchmarks.service_bench "
+              "directly")
+    else:
+        from benchmarks.service_bench import run_bench as run_service
+        service_report = run_service(fast=args.fast)
+        with open("BENCH_service.json", "w", encoding="utf-8") as f:
+            json.dump(service_report, f, indent=2)
+        m, p = service_report["measured"], service_report["predicted"]
+        print(_csv({"name": "service_bench/latency",
+                    "requests": service_report["traffic"]["requests"],
+                    "measured_p50_s": m["p50_s"],
+                    "measured_p99_s": m["p99_s"],
+                    "predicted_p50_s": p["p50_s"],
+                    "predicted_p99_s": p["p99_s"]}))
+        print(_csv({"name": "service_bench/dispatch",
+                    "service_dispatches":
+                        service_report["dispatches"]["service"],
+                    "serial_dispatches":
+                        service_report["dispatches"]["serial"],
+                    "bit_identical":
+                        service_report["bit_identical"],
+                    "dropped": service_report["dropped"]}))
 
     # ---- roofline reports over the dry-run sweeps ---------------------
     # v0 = paper-faithful framework baseline; v1 = beyond-baseline

@@ -1,0 +1,375 @@
+"""Prediction-service load bench: replay heavy mixed traffic, compare
+measured latency percentiles against the analytic SLO self-model, and
+prove the batching front saves compiled dispatches.
+
+Three tenants replay the traffic mix the ROADMAP names:
+
+* ``sweeper``   — bursts of ``mode="simulate"`` sweep cells (the
+  paper-kernel grid on both CPU models, both schedulers), repeated
+  rounds so later rounds exercise the cross-request cache;
+* ``interactive`` — steady single-point analytic requests;
+* ``hlo-dryrun`` — HLO module dry-runs (the TPU serving path).
+
+The replay records per-request latency envelopes
+(:class:`repro.service.ServiceResponse`), then:
+
+1. **SLO validation** — the service's busy-period self-model
+   (``repro.service.slo``, calibrated only from arrival rates, the
+   batch window and measured dispatch costs) predicts p50/p99; the
+   bench records measured vs. predicted into ``BENCH_service.json``.
+   Cache hits bypass the queue entirely, so the SLO comparison is over
+   the *queued* (non-cache-hit) requests; the all-traffic percentiles
+   are recorded alongside.
+2. **Dispatch accounting** — the same requests are issued serially
+   through a fresh ``AnalysisService.predict`` / ``predict_hlo``; the
+   service must have issued *strictly fewer* compiled dispatches
+   (cohort batching turns one round of sweep cells into one
+   ``simulate_many`` dispatch per machine model) with bit-identical
+   results.
+3. **Admission probe** — a deliberately tiny service (queue depth and
+   token bucket both small) replays a burst and must reject explicitly
+   (``AdmissionError``), not queue unboundedly.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/service_bench.py \
+        [--fast] [--out BENCH_service.json] [--check]
+
+``--check`` (the CI ``service-smoke`` gate) exits non-zero unless:
+zero dropped requests at nominal load; the SLO p99 prediction is
+within 50% of measurement; the service issued strictly fewer compiled
+dispatches than the serial baseline; results are bit-identical.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import random
+import sys
+import time
+
+
+_HLO_MODULES = {
+    "dot64": """
+HloModule dot64, entry_computation_layout={()->f32[64,64]{1,0}}
+
+ENTRY %main.1 () -> f32[64,64] {
+  %a = f32[64,64]{1,0} constant({...})
+  ROOT %d = f32[64,64]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""",
+    "chain512": """
+HloModule chain512, entry_computation_layout={()->f32[512,512]{1,0}}
+
+ENTRY %main.1 () -> f32[512,512] {
+  %a = f32[512,512]{1,0} constant({...})
+  %d = f32[512,512]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %s = f32[512,512]{1,0} add(%d, %d)
+}
+""",
+    "wide128": """
+HloModule wide128, entry_computation_layout={()->f32[128,128]{1,0}}
+
+ENTRY %main.1 () -> f32[128,128] {
+  %a = f32[128,128]{1,0} constant({...})
+  %b = f32[128,128]{1,0} constant({...})
+  %x = f32[128,128]{1,0} add(%a, %a)
+  %y = f32[128,128]{1,0} multiply(%b, %b)
+  ROOT %d = f32[128,128]{1,0} dot(%x, %y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""",
+}
+
+
+def _sweep_cells():
+    """The matched kernel x arch grid (each triad on its own model —
+    the pairs on which the tick-loop and batch drivers are locked
+    bit-identical by tests/test_sweep_engine.py)."""
+    from repro.core import paper_kernels as pk
+    return [("skl", pk.TRIAD_SKL_O3), ("zen", pk.TRIAD_ZEN_O3),
+            ("skl", pk.PI_O1), ("zen", pk.PI_O1),
+            ("skl", pk.PI_O2), ("zen", pk.PI_O2),
+            ("skl", pk.PI_SKL_O3), ("zen", pk.PI_ZEN_O3)]
+
+
+def build_traffic(fast: bool = False, seed: int = 0):
+    """``[(offset_s, ServiceRequest), ...]`` for the nominal replay."""
+    from repro.core.engine import AnalysisRequest
+    from repro.service import HloRequest, ServiceRequest
+
+    rng = random.Random(seed)
+    cells = _sweep_cells()
+    rounds = 2 if fast else 4
+    n_interactive = 16 if fast else 48
+    n_hlo = 6 if fast else 12
+    span = 1.2 if fast else 2.5      # arrival horizon (seconds)
+    traffic: list[tuple[float, ServiceRequest]] = []
+
+    # sweeper: one burst of the full grid per round (both schedulers)
+    for r in range(rounds):
+        t0 = r * span / rounds
+        for arch, src in cells:
+            for sched in ("uniform", "balanced"):
+                traffic.append((t0 + rng.uniform(0, 0.01),
+                                ServiceRequest(
+                    analysis=AnalysisRequest(kernel=src, arch=arch,
+                                             scheduler=sched,
+                                             mode="simulate"),
+                    tenant="sweeper", tag=f"round{r}")))
+
+    # interactive: steady single analytic points, heavy duplicates
+    for i in range(n_interactive):
+        arch, src = cells[rng.randrange(len(cells))]
+        traffic.append((rng.uniform(0, span), ServiceRequest(
+            analysis=AnalysisRequest(kernel=src, arch=arch),
+            tenant="interactive", tag=f"pt{i}")))
+
+    # hlo dry-runs: the serving path, a few distinct modules
+    names = list(_HLO_MODULES)
+    for i in range(n_hlo):
+        text = _HLO_MODULES[names[i % len(names)]]
+        traffic.append((rng.uniform(0, span), ServiceRequest(
+            hlo=HloRequest(text=text), tenant="hlo-dryrun",
+            tag=f"hlo{i}")))
+
+    traffic.sort(key=lambda t: t[0])
+    return traffic
+
+
+def _percentiles(xs: list[float]) -> dict[str, float]:
+    if not xs:
+        return {"count": 0, "p50_s": 0.0, "p99_s": 0.0, "max_s": 0.0}
+    ys = sorted(xs)
+
+    def q(p: float) -> float:
+        i = p * (len(ys) - 1)
+        lo = int(i)
+        hi = min(lo + 1, len(ys) - 1)
+        return ys[lo] + (ys[hi] - ys[lo]) * (i - lo)
+
+    return {"count": len(ys), "p50_s": round(q(0.50), 6),
+            "p90_s": round(q(0.90), 6), "p99_s": round(q(0.99), 6),
+            "max_s": round(ys[-1], 6)}
+
+
+def _result_signature(sreq, result) -> tuple:
+    """The exact-comparison fields for bit-identity between the
+    service (batched) and serial (per-request) paths."""
+    if sreq.analysis is not None:
+        return (result.predicted_cycles, result.port_bound_cycles,
+                result.lcd_cycles, result.bound_sim, result.binding)
+    t = result.terms
+    return (t.bound_combined, t.bound_overlap, t.critical_path_s)
+
+
+def serial_baseline(traffic) -> tuple[list[tuple], int]:
+    """The same requests, in arrival order, through per-request
+    ``AnalysisService.predict`` / ``predict_hlo`` on a fresh engine.
+    Returns (result signatures, compiled dispatch count)."""
+    from repro.core.engine import AnalysisService
+    engine = AnalysisService()
+    sigs = []
+    for _, sreq in traffic:
+        if sreq.analysis is not None:
+            res = engine.predict(sreq.analysis)
+        else:
+            h = sreq.hlo
+            res = engine.predict_hlo(
+                h.text, ici_links=h.ici_links, flop_dtype=h.flop_dtype,
+                mode=h.mode, machine=h.machine,
+                working_set=h.working_set)
+        sigs.append(_result_signature(sreq, res))
+    # each cold simulate cell is one tick-loop dispatch; each unique
+    # HLO module is one analysis dispatch
+    return sigs, engine.stats.sim_runs + engine.stats.hlo_misses
+
+
+def admission_probe() -> dict:
+    """A deliberately tiny service must reject a burst explicitly."""
+    from repro.core import paper_kernels as pk
+    from repro.core.engine import AnalysisRequest
+    from repro.service import (PredictionService, ServiceConfig,
+                               ServiceRequest, TenantPolicy, replay)
+
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=0.005, max_queue_depth=8,
+        default_policy=TenantPolicy(max_in_flight=4, rate_per_s=50.0,
+                                    burst=4.0)))
+    burst = [(0.0, ServiceRequest(
+        analysis=AnalysisRequest(kernel=pk.PI_O1, arch="skl",
+                                 unroll_factor=1 + (i % 8)),
+        tenant="flooder")) for i in range(32)]
+    resps = replay(svc, burst)
+    from repro.service import AdmissionError
+    rejected = sum(1 for r in resps
+                   if isinstance(r.error, AdmissionError))
+    served = sum(1 for r in resps if r.ok)
+    return {"requests": len(burst), "rejected": rejected,
+            "served": served,
+            "rejected_reasons": sorted(
+                {r.error.reason for r in resps
+                 if isinstance(r.error, AdmissionError)})}
+
+
+def run_bench(fast: bool = False) -> dict:
+    from repro.service import PredictionService, ServiceConfig, replay
+
+    window = 0.02
+    traffic = build_traffic(fast=fast)
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=window, max_queue_depth=1024,
+        backend="numpy"))       # grouped vectorized dispatch, always
+    t0 = time.perf_counter()
+    resps = replay(svc, traffic)
+    wall = time.perf_counter() - t0
+
+    dropped = sum(1 for r in resps if not r.ok)
+    queued = [r for r in resps if r.ok and not r.cache_hit]
+    measured_queued = _percentiles([r.total_s for r in queued])
+    measured_all = _percentiles([r.total_s for r in resps if r.ok])
+    prediction = svc.predict_slo()
+
+    # warm tail: replay a slice of the same traffic against the (still
+    # warm) cross-request cache — these must be submit-time cache hits
+    rng = random.Random(1)
+    tail = [(rng.uniform(0, 0.1), sreq)
+            for _, sreq in traffic[:: max(1, len(traffic) // 10)]]
+    tail_resps = replay(svc, tail)
+    tail_hits = sum(1 for r in tail_resps if r.ok and r.cache_hit)
+    stats = svc.export_stats()
+
+    sigs_service = [_result_signature(r.request, r.result)
+                    for r in resps if r.ok]
+    sigs_service += [_result_signature(r.request, r.result)
+                     for r in tail_resps if r.ok]
+    sigs_serial, serial_dispatches = serial_baseline(
+        [t for t, r in zip(traffic, resps) if r.ok]
+        + [t for t, r in zip(tail, tail_resps) if r.ok])
+    bit_identical = sigs_service == sigs_serial
+    service_dispatches = svc.telemetry.engine_dispatches
+
+    p99_meas = measured_queued["p99_s"]
+    p99_pred = prediction.p99_s
+    p99_ratio = (p99_pred / p99_meas) if p99_meas else float("inf")
+
+    report = {
+        "benchmark": "service_bench",
+        "host": {"cpu_count": os.cpu_count(),
+                 "platform": platform.platform(),
+                 "python": platform.python_version()},
+        "config": {"fast": fast, "batch_window_s": window,
+                   "backend": "numpy"},
+        "traffic": {
+            "requests": len(traffic),
+            "tenants": sorted({r.tenant for _, r in traffic}),
+            "kinds": {
+                "x86_simulate": sum(
+                    1 for _, r in traffic
+                    if r.analysis is not None
+                    and r.analysis.mode == "simulate"),
+                "x86_analytic": sum(
+                    1 for _, r in traffic
+                    if r.analysis is not None
+                    and r.analysis.mode == "analytic"),
+                "hlo": sum(1 for _, r in traffic if r.hlo is not None),
+            },
+            "wall_s": round(wall, 4),
+        },
+        "dropped": dropped,
+        "measured": measured_queued,
+        "measured_all": measured_all,
+        "predicted": {
+            "p50_s": round(prediction.p50_s, 6),
+            "p99_s": round(prediction.p99_s, 6),
+            "utilization": round(prediction.utilization, 4),
+            "per_class": prediction.per_class,
+        },
+        "slo": {
+            "p99_measured_s": p99_meas,
+            "p99_predicted_s": round(p99_pred, 6),
+            "p99_ratio": round(p99_ratio, 4),
+            "within_50pct": bool(0.5 <= p99_ratio <= 1.5),
+        },
+        "dispatches": {"service": service_dispatches,
+                       "serial": serial_dispatches},
+        "bit_identical": bit_identical,
+        "warm_tail": {"requests": len(tail), "cache_hits": tail_hits},
+        "cache": stats["cache"],
+        "stages": stats["stages"],
+        "batch_size": stats["batch_size"],
+        "tenants": stats["tenants"],
+        "engine_hit_rates": stats["engine_hit_rates"],
+        "admission_probe": admission_probe(),
+    }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller replay (CI service-smoke)")
+    ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on dropped requests, SLO p99 "
+                         "off by >50%%, no dispatch savings, or "
+                         "result drift")
+    args = ap.parse_args()
+
+    report = run_bench(fast=args.fast)
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2)
+
+    m, p = report["measured"], report["predicted"]
+    print(f"replayed {report['traffic']['requests']} requests "
+          f"({', '.join(report['traffic']['tenants'])}) in "
+          f"{report['traffic']['wall_s']}s, dropped {report['dropped']}")
+    print(f"measured  p50 {m['p50_s'] * 1e3:8.2f} ms   "
+          f"p99 {m['p99_s'] * 1e3:8.2f} ms  "
+          f"({m['count']} queued requests)")
+    print(f"predicted p50 {p['p50_s'] * 1e3:8.2f} ms   "
+          f"p99 {p['p99_s'] * 1e3:8.2f} ms  "
+          f"(utilization {p['utilization']})")
+    d = report["dispatches"]
+    wt = report["warm_tail"]
+    print(f"dispatches: service {d['service']} vs serial "
+          f"{d['serial']}  bit_identical={report['bit_identical']}  "
+          f"warm tail {wt['cache_hits']}/{wt['requests']} cache hits "
+          f"(overall hit rate {report['cache']['hit_rate']:.3f})")
+    ap_ = report["admission_probe"]
+    print(f"admission probe: {ap_['rejected']}/{ap_['requests']} "
+          f"rejected ({', '.join(ap_['rejected_reasons'])})")
+    print(f"wrote {args.out}")
+
+    if args.check:
+        failures = []
+        if report["dropped"]:
+            failures.append(f"{report['dropped']} requests dropped at "
+                            "nominal load")
+        if not report["slo"]["within_50pct"]:
+            failures.append(
+                f"SLO self-model p99 off by more than 50% "
+                f"(predicted {report['slo']['p99_predicted_s']}s vs "
+                f"measured {report['slo']['p99_measured_s']}s, ratio "
+                f"{report['slo']['p99_ratio']})")
+        if d["service"] >= d["serial"]:
+            failures.append(
+                f"no dispatch savings: service {d['service']} vs "
+                f"serial {d['serial']}")
+        if not report["bit_identical"]:
+            failures.append("service results drifted from serial "
+                            "predict")
+        if not wt["cache_hits"]:
+            failures.append("warm tail produced no cross-request "
+                            "cache hits")
+        if not ap_["rejected"]:
+            failures.append("admission probe rejected nothing")
+        if failures:
+            for f_ in failures:
+                print(f"FAIL: {f_}", file=sys.stderr)
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,8 +23,11 @@ Usage::
         [--fast] [--out BENCH_sweep.json] [--check]
 
 ``--check`` exits non-zero if the jit backend is slower than numpy at
-any batch >= 64 (the CI perf-smoke gate).  See docs/performance.md for
-how to read the output.
+any batch >= 64, if an ECM re-sweep leaves the planner fast path, or
+if the recompute pass (sweep again after ``drop_results()`` expiry)
+fails to reuse any compiled ``SimProgram`` (the program cache must not
+be cold across successive sweeps).  See docs/performance.md for how to
+read the output.
 """
 from __future__ import annotations
 
@@ -150,16 +153,29 @@ def bench_sweep(cells_target: int = 1024) -> dict:
             kernels, archs=("skl", "zen"),
             schedulers=("uniform", "balanced"), mode="simulate"))
     warm_dt = time.perf_counter() - t1
+    # recompute pass: expire the volatile caches (results, sims) the
+    # way a persistent service does when result TTLs lapse, then sweep
+    # again — compiled SimPrograms and dependency edges must be
+    # *reused* (program-cache hits), not recompiled.  Before this pass
+    # existed the program cache recorded hit rate 0.0 on every bench
+    # run: nothing ever exercised reuse across sweeps.
+    t2 = time.perf_counter()
+    svc.drop_results()
+    recompute_cells = len(svc.sweep(
+        kernels, archs=("skl", "zen"),
+        schedulers=("uniform", "balanced"), mode="simulate"))
+    recompute_dt = time.perf_counter() - t2
+    program_hit_rate = svc.stats.hit_rate("program")
     # ECM pass over the already-swept grid (docs/ecm.md): must reuse
     # every cached analytic pass and simulation — the working set only
     # keys the traffic memo, never the sim cache
     sim_runs_before = svc.stats.sim_runs
     dispatches_before = svc.stats.sim_group_dispatches
-    t2 = time.perf_counter()
+    t3 = time.perf_counter()
     ecm_grid = svc.sweep(kernels, archs=("skl", "zen"),
                          schedulers=("uniform", "balanced"),
                          mode="simulate", working_set=64.0 * 2**20)
-    ecm_dt = time.perf_counter() - t2
+    ecm_dt = time.perf_counter() - t3
     ecm_extra_sims = svc.stats.sim_runs - sim_runs_before
     ecm_extra_dispatches = (svc.stats.sim_group_dispatches
                             - dispatches_before)
@@ -176,6 +192,10 @@ def bench_sweep(cells_target: int = 1024) -> dict:
         if warm_dt else 0.0,
         "sim_runs": s.sim_runs,
         "group_dispatches": s.sim_group_dispatches,
+        "recompute_cells": recompute_cells,
+        "recompute_seconds": round(recompute_dt, 4),
+        "program_hits": s.program_hits,
+        "program_hit_rate": round(program_hit_rate, 4),
         "ecm_cells": len(ecm_grid),
         "ecm_seconds": round(ecm_dt, 4),
         "ecm_cells_per_s": round(len(ecm_grid) / ecm_dt, 2)
@@ -225,6 +245,11 @@ def run_bench(fast: bool = False) -> dict:
         "ecm_zero_extra_dispatches": (
             report["sweep"]["ecm_extra_sim_runs"] == 0
             and report["sweep"]["ecm_extra_group_dispatches"] == 0),
+        # compiled SimPrograms must be *reused* when a later sweep
+        # re-simulates after result expiry (the recompute pass) — a
+        # 0.0 program hit rate means every sweep recompiles from
+        # scratch
+        "program_cache_reused": report["sweep"]["program_hits"] > 0,
     }
     return report
 
@@ -254,7 +279,9 @@ def main() -> None:
           f"{sw['cold_cells_per_s']} cells/s "
           f"({sw['group_dispatches']} dispatches, {sw['sim_runs']} "
           f"simulations), warm {sw['warm_cells']} cells at "
-          f"{sw['warm_cells_per_s']} cells/s, ecm {sw['ecm_cells']} "
+          f"{sw['warm_cells_per_s']} cells/s, recompute "
+          f"{sw['recompute_cells']} cells with program hit rate "
+          f"{sw['program_hit_rate']}, ecm {sw['ecm_cells']} "
           f"cells at {sw['ecm_cells_per_s']} cells/s "
           f"(+{sw['ecm_extra_sim_runs']} sims)")
     print(f"wrote {args.out}")
@@ -266,6 +293,10 @@ def main() -> None:
         if not report["gate"]["ecm_zero_extra_dispatches"]:
             failures.append("ECM sweep left the planner fast path "
                             "(extra sim runs/dispatches)")
+        if not report["gate"]["program_cache_reused"]:
+            failures.append("program cache cold: recompute sweep "
+                            "after drop_results() reused no compiled "
+                            "SimPrograms (hit rate 0.0)")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)

@@ -445,6 +445,19 @@ class AnalysisService:
             self._results[key] = res
         return res
 
+    def request_key(self, request: AnalysisRequest) -> tuple:
+        """Public content-address of one request.
+
+        Like the internal result key but keyed by the *machine digest*
+        instead of the arch id, so it stays valid across registries and
+        can be shared by out-of-process caches
+        (``repro.service.PredictionService`` keys its cross-request
+        TTL cache on this).
+        """
+        machine = self.resolve_machine(request.arch)
+        key = self._result_key(request)
+        return (machine.digest,) + key[1:]
+
     def _result_key(self, request: AnalysisRequest) -> tuple:
         if request.mode not in ("analytic", "simulate"):
             raise ValueError(f"unknown mode {request.mode!r} "
@@ -739,11 +752,43 @@ class AnalysisService:
             out.append(res if res is not None else self.predict(req))
         return out
 
-    async def predict_async(self,
-                            request: AnalysisRequest) -> AnalysisResult:
-        """Awaitable ``predict`` (runs on the default executor)."""
+    async def predict_async(self, request: AnalysisRequest, *,
+                            timeout: float | None = None,
+                            retries: int = 0,
+                            backoff_s: float = 0.05) -> AnalysisResult:
+        """Awaitable ``predict`` (runs on the default executor), with
+        graceful-degradation semantics for long-lived callers:
+
+        * ``timeout`` — seconds per attempt; a dispatch that exceeds it
+          raises :class:`asyncio.TimeoutError` to the caller instead of
+          hanging it (the abandoned executor thread finishes in the
+          background and still fills the result cache).
+        * ``retries`` — extra attempts after a timeout *or* an engine
+          exception, with exponential backoff starting at
+          ``backoff_s`` (doubled per retry).  Invalid-request errors
+          (``ValueError``) are never retried — they are deterministic.
+        * **Cancellation**: cancelling the awaiting task propagates
+          :class:`asyncio.CancelledError` immediately (no retry).  An
+          in-flight executor call cannot be interrupted mid-compute;
+          it completes in the background and populates the caches, so
+          a re-submit of the same request is a cache hit.
+        """
         loop = asyncio.get_running_loop()
-        return await loop.run_in_executor(None, self.predict, request)
+        delay = backoff_s
+        for attempt in range(1 + max(0, retries)):
+            try:
+                fut = loop.run_in_executor(None, self.predict, request)
+                if timeout is None:
+                    return await fut
+                return await asyncio.wait_for(fut, timeout)
+            except (asyncio.CancelledError, ValueError):
+                raise
+            except Exception:      # timeout or transient engine error
+                if attempt >= retries:
+                    raise
+                await asyncio.sleep(delay)
+                delay *= 2
+        raise RuntimeError("unreachable")    # pragma: no cover
 
     def sweep(self, kernels: Mapping[str, str | tuple[Instruction, ...]],
               archs: Iterable[str] = ("skl", "zen"),
@@ -853,6 +898,23 @@ class AnalysisService:
         return [out[text] for text in texts]
 
     # ------------------------------------------------------------------
+    def drop_results(self) -> None:
+        """Drop the *volatile* caches (results, simulations, HLO
+        analyses) while keeping the compiled artifacts — dependency
+        edges, :class:`SimProgram`\\ s, LP solves, lookups, traffic,
+        machine resolutions.
+
+        This is the expiry operation a persistent service applies when
+        result TTLs lapse: the next sweep re-simulates (fresh numbers)
+        but reuses every compiled program, which is what makes
+        ``stats.program_hits`` nonzero across successive sweeps —
+        ``benchmarks/sweep_bench.py`` gates exactly that.
+        """
+        with self._lock:
+            self._results.clear()
+            self._sim_cache.clear()
+            self._hlo_cache.clear()
+
     def cache_clear(self) -> None:
         """Drop every cache (databases are kept) and reset the stats."""
         with self._lock:

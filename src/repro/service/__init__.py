@@ -1,0 +1,31 @@
+"""repro.service — persistent multi-tenant prediction service.
+
+A long-lived async front over the in-process prediction engine
+(:class:`repro.core.engine.AnalysisService`): request queue with
+per-tenant admission control, cohort/batch formation by
+(machine digest x mode x backend), a TTL/size-bounded cross-request
+result cache, JSON observability, and an analytic SLO self-model that
+predicts the service's own p50/p99 latency with busy-period analysis.
+See docs/serving-service.md.
+"""
+from __future__ import annotations
+
+from .admission import AdmissionController, AdmissionError, TenantPolicy
+from .cache import TTLCache
+from .cohort import cohort_key, form_cohorts, is_partition
+from .request import (DeadlineExceeded, DispatchError, HloRequest,
+                      ServiceClosed, ServiceRequest, ServiceResponse)
+from .service import PredictionService, ServiceConfig, replay
+from .slo import (FlowSpec, SloModel, SloPrediction,
+                  busy_period_response, mixture_quantile)
+from .telemetry import LatencyHistogram, Telemetry
+
+__all__ = [
+    "AdmissionController", "AdmissionError", "DeadlineExceeded",
+    "DispatchError", "FlowSpec", "HloRequest", "LatencyHistogram",
+    "PredictionService", "ServiceClosed", "ServiceConfig",
+    "ServiceRequest", "ServiceResponse", "SloModel", "SloPrediction",
+    "TTLCache", "Telemetry", "TenantPolicy", "busy_period_response",
+    "cohort_key", "form_cohorts", "is_partition", "mixture_quantile",
+    "replay",
+]

@@ -1,0 +1,122 @@
+"""Per-tenant admission control: bounded queue depth + token buckets.
+
+A long-lived prediction service must reject load it cannot carry
+*explicitly* (an :class:`AdmissionError` the caller can back off on)
+instead of letting queueing latency grow without bound.  Two mechanisms
+compose, both checked at submit time before a request touches the
+queue:
+
+* **bounded depth** — a global in-flight ceiling plus a per-tenant
+  ceiling (no tenant can occupy the whole queue);
+* **token-bucket rate limit** — each tenant refills at
+  ``rate_per_s`` tokens/s up to ``burst``; a submit spends one token.
+  The bucket is the classic continuous-refill formulation, so a tenant
+  may burst up to ``burst`` requests instantly and then sustain
+  ``rate_per_s``.
+
+Both are pure bookkeeping (no clocks of their own: the caller passes
+``now``), which keeps them trivially testable and lets the service
+drive them from the asyncio loop's monotonic clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class AdmissionError(Exception):
+    """Request rejected at submit time (queue full or rate limited).
+
+    Attributes:
+        tenant: the tenant whose request was rejected.
+        reason: ``"queue_depth"``, ``"tenant_depth"`` or ``"rate"``.
+    """
+
+    def __init__(self, tenant: str, reason: str, detail: str = ""):
+        self.tenant = tenant
+        self.reason = reason
+        super().__init__(
+            f"admission rejected for tenant {tenant!r}: {reason}"
+            + (f" ({detail})" if detail else ""))
+
+
+@dataclass(frozen=True)
+class TenantPolicy:
+    """Admission knobs for one tenant (or the default for all)."""
+
+    max_in_flight: int = 64         # per-tenant queue-depth ceiling
+    rate_per_s: float = float("inf")   # sustained token refill rate
+    burst: float = 64.0             # bucket capacity (max burst size)
+
+
+@dataclass
+class TokenBucket:
+    """Continuous-refill token bucket; ``try_spend`` is O(1)."""
+
+    rate_per_s: float
+    burst: float
+    tokens: float = field(default=-1.0)   # -1 = start full
+    stamp: float = 0.0
+
+    def try_spend(self, now: float, cost: float = 1.0) -> bool:
+        if self.tokens < 0:
+            self.tokens = self.burst
+            self.stamp = now
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.stamp) *
+                          self.rate_per_s)
+        self.stamp = now
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return True
+        return False
+
+
+class AdmissionController:
+    """Tracks in-flight counts and per-tenant buckets.
+
+    ``admit(tenant, now)`` either reserves a slot (the caller must later
+    ``release(tenant)`` exactly once) or raises :class:`AdmissionError`.
+    Not thread-safe by itself — the service calls it from one event
+    loop; the synchronous bench path serializes through the loop too.
+    """
+
+    def __init__(self, max_queue_depth: int = 256,
+                 default_policy: TenantPolicy | None = None,
+                 per_tenant: dict[str, TenantPolicy] | None = None):
+        self.max_queue_depth = max_queue_depth
+        self.default_policy = default_policy or TenantPolicy()
+        self.per_tenant = dict(per_tenant or {})
+        self.in_flight: dict[str, int] = {}
+        self._buckets: dict[str, TokenBucket] = {}
+
+    def policy(self, tenant: str) -> TenantPolicy:
+        return self.per_tenant.get(tenant, self.default_policy)
+
+    @property
+    def total_in_flight(self) -> int:
+        return sum(self.in_flight.values())
+
+    def admit(self, tenant: str, now: float) -> None:
+        pol = self.policy(tenant)
+        mine = self.in_flight.get(tenant, 0)
+        if self.total_in_flight >= self.max_queue_depth:
+            raise AdmissionError(tenant, "queue_depth",
+                                 f"global depth {self.max_queue_depth}")
+        if mine >= pol.max_in_flight:
+            raise AdmissionError(tenant, "tenant_depth",
+                                 f"tenant depth {pol.max_in_flight}")
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            bucket = TokenBucket(pol.rate_per_s, pol.burst)
+            self._buckets[tenant] = bucket
+        if not bucket.try_spend(now):
+            raise AdmissionError(tenant, "rate",
+                                 f"{pol.rate_per_s}/s burst {pol.burst}")
+        self.in_flight[tenant] = mine + 1
+
+    def release(self, tenant: str) -> None:
+        n = self.in_flight.get(tenant, 0)
+        if n <= 1:
+            self.in_flight.pop(tenant, None)
+        else:
+            self.in_flight[tenant] = n - 1

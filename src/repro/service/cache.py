@@ -1,0 +1,88 @@
+"""Bounded cross-request result cache (TTL + LRU size cap).
+
+The engine's own memo caches are unbounded and live for the engine's
+lifetime — right for a batch job, wrong for a persistent multi-tenant
+service where kernels churn.  This cache fronts the engine with two
+bounds:
+
+* **TTL** — entries older than ``ttl_s`` are treated as absent (and
+  reaped lazily on access / explicitly by ``purge``);
+* **size** — at most ``max_entries`` live entries, evicting least
+  recently *used* first.
+
+Keys are the same content digests the engine memoizes on (machine
+digest x kernel id x request knobs), so two tenants asking the same
+question share one entry.  Like the admission controller, the cache
+takes ``now`` from the caller — deterministic under test.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+class TTLCache:
+    """LRU-of-bounded-size with per-entry TTL; O(1) get/put."""
+
+    def __init__(self, max_entries: int = 4096,
+                 ttl_s: float = float("inf")):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.ttl_s = ttl_s
+        self._data: OrderedDict[Hashable, tuple[float, Any]] = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.expirations = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def get(self, key: Hashable, now: float = 0.0):
+        """The cached value or ``None`` (expired entries count as
+        misses and are dropped)."""
+        entry = self._data.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        stamp, value = entry
+        if now - stamp > self.ttl_s:
+            del self._data[key]
+            self.expirations += 1
+            self.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def put(self, key: Hashable, value: Any, now: float = 0.0) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = (now, value)
+        while len(self._data) > self.max_entries:
+            self._data.popitem(last=False)
+            self.evictions += 1
+
+    def purge(self, now: float) -> int:
+        """Drop every expired entry; returns the count dropped."""
+        dead = [k for k, (stamp, _) in self._data.items()
+                if now - stamp > self.ttl_s]
+        for k in dead:
+            del self._data[k]
+        self.expirations += len(dead)
+        return len(dead)
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict[str, float]:
+        return {"entries": len(self._data), "hits": self.hits,
+                "misses": self.misses, "hit_rate": self.hit_rate(),
+                "evictions": self.evictions,
+                "expirations": self.expirations}

@@ -1,0 +1,425 @@
+"""The persistent multi-tenant prediction service.
+
+:class:`PredictionService` is a long-lived asyncio front over the
+in-process :class:`~repro.core.engine.AnalysisService` planner:
+
+    submit -> admission control -> request queue -> cohort former
+           -> batched engine dispatch -> response (+ telemetry)
+
+* **Admission** (``repro.service.admission``): bounded global and
+  per-tenant queue depth plus token-bucket rate limits; rejected
+  submits raise :class:`AdmissionError` immediately instead of queueing
+  unboundedly.
+* **Batching** (``repro.service.cohort``): the dispatcher drains the
+  queue after a tunable ``batch_window_s``, partitions the in-flight
+  set by ``(kind, machine digest, mode, backend)`` and issues *one*
+  ``predict_batch`` / ``predict_hlo_batch`` per cohort — the grouped
+  planner then turns a cohort into a handful of compiled dispatches.
+* **Cross-request cache** (``repro.service.cache``): responses are
+  kept in a TTL+size-bounded cache keyed by the same content digests
+  the engine memoizes on, shared across tenants; hits return at submit
+  time without touching the queue.
+* **Robustness**: per-request deadlines (submit-relative,
+  propagated to the dispatcher which skips expired work), per-dispatch
+  timeout with bounded exponential-backoff retries, and a documented
+  cancellation path (cancel the task awaiting :meth:`submit`; the
+  dispatcher notices and drops the request from its cohort).
+* **Observability** (``repro.service.telemetry``): per-stage latency
+  histograms, queue-depth/batch-size distributions, per-tenant and
+  per-cohort-class counters, trace events — ``export_stats()`` returns
+  one JSON dict, which also feeds the analytic SLO self-model
+  (``repro.service.slo``).
+
+See docs/serving-service.md for the worked example and
+``benchmarks/service_bench.py`` for the load-generation harness.
+"""
+from __future__ import annotations
+
+import asyncio
+import hashlib
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Sequence
+
+from repro.core.engine import AnalysisService
+
+from .admission import AdmissionController, AdmissionError, TenantPolicy
+from .cache import TTLCache
+from .cohort import form_cohorts
+from .request import (DeadlineExceeded, DispatchError, HloRequest,
+                      ServiceClosed, ServiceRequest, ServiceResponse)
+from .slo import SloModel, SloPrediction
+from .telemetry import Telemetry, class_name
+
+
+@dataclass
+class ServiceConfig:
+    """Tunables of one :class:`PredictionService` (see
+    docs/serving-service.md#admission-control-knobs)."""
+
+    batch_window_s: float = 0.002       # cohort formation window
+    max_queue_depth: int = 256          # global in-flight ceiling
+    default_policy: TenantPolicy = dc_field(default_factory=TenantPolicy)
+    tenant_policies: dict[str, TenantPolicy] = dc_field(
+        default_factory=dict)
+    default_timeout_s: float = 60.0     # per-request deadline
+    dispatch_timeout_s: float = 60.0    # one engine dispatch attempt
+    max_retries: int = 1                # extra dispatch attempts
+    retry_backoff_s: float = 0.05       # doubled per retry
+    max_cohort: int = 1024              # split larger cohorts
+    cache_entries: int = 4096           # cross-request cache size bound
+    cache_ttl_s: float = float("inf")   # cross-request cache TTL
+    backend: str | None = None          # default sim batch driver
+
+
+class PredictionService:
+    """Async, batching, caching, admission-controlled prediction front.
+
+    One instance wraps one :class:`AnalysisService` (its planner and
+    memo caches are shared by every tenant).  Lifecycle::
+
+        service = PredictionService()
+        await service.start()
+        resp = await service.submit(ServiceRequest(analysis=req,
+                                                   tenant="alice"))
+        await service.stop()
+
+    or synchronously via :func:`replay`.  ``submit`` raises
+    :class:`AdmissionError` / :class:`ServiceClosed` at submit time;
+    every other failure (deadline, dispatch error) comes back *inside*
+    the :class:`ServiceResponse` so telemetry and partial batches stay
+    consistent.
+    """
+
+    _STOP = object()
+
+    def __init__(self, engine: AnalysisService | None = None,
+                 config: ServiceConfig | None = None):
+        self.engine = engine or AnalysisService()
+        self.config = config or ServiceConfig()
+        self.admission = AdmissionController(
+            max_queue_depth=self.config.max_queue_depth,
+            default_policy=self.config.default_policy,
+            per_tenant=self.config.tenant_policies)
+        self.cache = TTLCache(max_entries=self.config.cache_entries,
+                              ttl_s=self.config.cache_ttl_s)
+        self.telemetry = Telemetry()
+        self._queue: asyncio.Queue | None = None
+        self._dispatcher: asyncio.Task | None = None
+        self._closed = True
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def start(self) -> None:
+        """Start the dispatcher; idempotent while running."""
+        if self._dispatcher is not None and not self._dispatcher.done():
+            return
+        self._queue = asyncio.Queue()
+        self._closed = False
+        loop = asyncio.get_running_loop()
+        if self.telemetry.started_at is None:
+            self.telemetry.started_at = loop.time()
+        self._dispatcher = asyncio.create_task(self._run())
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop accepting work; ``drain=True`` (default) serves every
+        already-queued request first, ``False`` fails them with
+        :class:`ServiceClosed`."""
+        if self._closed and self._dispatcher is None:
+            return
+        self._closed = True
+        if self._queue is not None:
+            self._queue.put_nowait(self._STOP)
+        if self._dispatcher is not None:
+            if not drain:
+                self._dispatcher.cancel()
+            try:
+                await self._dispatcher
+            except asyncio.CancelledError:
+                pass
+            self._dispatcher = None
+        if not drain and self._queue is not None:
+            while not self._queue.empty():
+                item = self._queue.get_nowait()
+                if item is not self._STOP:
+                    self._finalize_error(item, ServiceClosed("stopped"))
+        self.telemetry.stopped_at = asyncio.get_running_loop().time()
+
+    # ------------------------------------------------------------------
+    # submit
+    # ------------------------------------------------------------------
+    def _cache_key(self, sreq: ServiceRequest) -> tuple:
+        if sreq.analysis is not None:
+            return ("x86", self.engine.request_key(sreq.analysis),
+                    sreq.backend)
+        h = sreq.hlo
+        digest = hashlib.sha256(h.text.encode()).hexdigest()
+        machine = self.engine.resolve_machine(h.machine)
+        return ("hlo", machine.digest, digest, h.mode, h.ici_links,
+                h.flop_dtype, h.working_set)
+
+    async def submit(self, sreq: ServiceRequest) -> ServiceResponse:
+        """Admit, enqueue and await one request.
+
+        Cache hits return immediately (no admission cost — the cached
+        answer consumes no queue capacity).  Cancellation: cancelling
+        the task awaiting ``submit`` abandons the request; the
+        dispatcher drops it from its cohort (counted per tenant as
+        ``cancelled``) and its admission slot is released when the
+        cohort containing it is finalized.
+        """
+        loop = asyncio.get_running_loop()
+        now = loop.time()
+        tc = self.telemetry.tenant(sreq.tenant)
+        tc.submitted += 1
+        if self._closed or self._queue is None:
+            raise ServiceClosed("service not started or stopped")
+        key = self._cache_key(sreq)
+        hit = self.cache.get(key, now)
+        if hit is not None:
+            tc.cache_hits += 1
+            tc.completed += 1
+            dt = loop.time() - now
+            self.telemetry.total.observe(dt)
+            return ServiceResponse(request=sreq, result=hit,
+                                   cache_hit=True, total_s=dt)
+        try:
+            self.admission.admit(sreq.tenant, now)
+        except AdmissionError:
+            tc.rejected += 1
+            self.telemetry.trace("rejected", tenant=sreq.tenant,
+                                 tag=sreq.tag)
+            raise
+        tc.admitted += 1
+        timeout = sreq.timeout_s if sreq.timeout_s is not None \
+            else self.config.default_timeout_s
+        pending = _Pending(request=sreq, future=loop.create_future(),
+                           cache_key=key, t_submit=now,
+                           deadline=now + timeout)
+        self._queue.put_nowait(pending)
+        try:
+            return await asyncio.wait_for(
+                asyncio.shield(pending.future), timeout)
+        except asyncio.TimeoutError:
+            pending.abandoned = True
+            tc.deadline_exceeded += 1
+            return ServiceResponse(
+                request=sreq, error=DeadlineExceeded(
+                    f"timeout {timeout}s elapsed in queue/dispatch"),
+                total_s=loop.time() - now)
+        except asyncio.CancelledError:
+            pending.abandoned = True
+            tc.cancelled += 1
+            raise
+
+    # ------------------------------------------------------------------
+    # dispatcher
+    # ------------------------------------------------------------------
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        stop = False
+        while not stop:
+            item = await self._queue.get()
+            if item is self._STOP:
+                break
+            batch = [item]
+            if self.config.batch_window_s > 0:
+                await asyncio.sleep(self.config.batch_window_s)
+            while True:
+                try:
+                    nxt = self._queue.get_nowait()
+                except asyncio.QueueEmpty:
+                    break
+                if nxt is self._STOP:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self.telemetry.queue_depth.observe(float(len(batch)))
+            t_form = loop.time()
+            cohorts = form_cohorts(
+                self.engine, [p.request for p in batch],
+                max_cohort=self.config.max_cohort)
+            self.telemetry.trace(
+                "batch_formed", requests=len(batch),
+                cohorts=len(cohorts))
+            for key, idxs in cohorts:
+                await self._dispatch_cohort(
+                    key, [batch[i] for i in idxs], t_form)
+            self.cache.purge(loop.time())
+
+    def _finalize_error(self, pending: "_Pending",
+                        err: BaseException) -> None:
+        tc = self.telemetry.tenant(pending.request.tenant)
+        if isinstance(err, DeadlineExceeded):
+            tc.deadline_exceeded += 1
+        else:
+            tc.failed += 1
+        self.admission.release(pending.request.tenant)
+        if not pending.future.done():
+            pending.future.set_result(ServiceResponse(
+                request=pending.request, error=err))
+
+    def _engine_dispatch_fn(self, key: tuple,
+                            sreqs: list[ServiceRequest]):
+        """The blocking engine call for one cohort (runs on the
+        default executor)."""
+        if key[0] == "x86":
+            backend = key[3] or self.config.backend
+            reqs = [s.analysis for s in sreqs]
+            return lambda: self.engine.predict_batch(reqs,
+                                                     backend=backend)
+        h0 = sreqs[0].hlo
+        texts = [s.hlo.text for s in sreqs]
+        machine = self.engine.resolve_machine(h0.machine)
+        return lambda: self.engine.predict_hlo_batch(
+            texts, ici_links=h0.ici_links, flop_dtype=h0.flop_dtype,
+            mode=h0.mode, machine=machine,
+            working_set=h0.working_set)
+
+    async def _dispatch_cohort(self, key: tuple,
+                               pendings: list["_Pending"],
+                               t_form: float) -> None:
+        loop = asyncio.get_running_loop()
+        live: list[_Pending] = []
+        for p in pendings:
+            if p.abandoned:
+                # submit() already counted deadline/cancel; just free
+                # the admission slot
+                self.admission.release(p.request.tenant)
+            elif t_form > p.deadline:
+                self._finalize_error(p, DeadlineExceeded(
+                    "deadline elapsed before dispatch"))
+            else:
+                live.append(p)
+        if not live:
+            return
+        cls = self.telemetry.cohort_class(key)
+        cls.requests += len(live)
+        self.telemetry.batch_size.observe(float(len(live)))
+        fn = self._engine_dispatch_fn(key, [p.request for p in live])
+        stats = self.engine.stats
+        before = (stats.sim_group_dispatches, stats.sim_runs,
+                  stats.hlo_misses)
+        backoff = self.config.retry_backoff_s
+        err: BaseException | None = None
+        results = None
+        t0 = loop.time()
+        for attempt in range(1 + self.config.max_retries):
+            if attempt:
+                cls.retries += 1
+                self.telemetry.trace("retry", cohort=class_name(key),
+                                     attempt=attempt)
+                await asyncio.sleep(backoff)
+                backoff *= 2
+            try:
+                results = await asyncio.wait_for(
+                    loop.run_in_executor(None, fn),
+                    self.config.dispatch_timeout_s)
+                err = None
+                break
+            except asyncio.TimeoutError as e:
+                err = DispatchError(
+                    f"dispatch timed out after "
+                    f"{self.config.dispatch_timeout_s}s")
+                err.__cause__ = e
+            except Exception as e:        # engine-side failure
+                err = DispatchError(str(e))
+                err.__cause__ = e
+        dt = loop.time() - t0
+        cls.dispatches += 1
+        cls.cost.observe(dt)
+        self.telemetry.dispatch.observe(dt)
+        after = (self.engine.stats.sim_group_dispatches,
+                 self.engine.stats.sim_runs, self.engine.stats.hlo_misses)
+        d_groups, d_sims, d_hlo = (a - b for a, b in zip(after, before))
+        # one grouped simulate_many call = one compiled dispatch; the
+        # small-batch tick-loop fallback = one dispatch per simulation;
+        # each unique HLO module analyzed = one dispatch
+        self.telemetry.engine_dispatches += \
+            (d_groups if d_groups else d_sims) + d_hlo
+        now = loop.time()
+        if err is not None:
+            self.telemetry.trace("dispatch_failed",
+                                 cohort=class_name(key), error=str(err))
+            for p in live:
+                self._finalize_error(p, err)
+            return
+        for p, result in zip(live, results):
+            self.cache.put(p.cache_key, result, now)
+            if not p.abandoned:    # abandoned = accounted at submit
+                self.telemetry.tenant(p.request.tenant).completed += 1
+            self.admission.release(p.request.tenant)
+            queue_s = t_form - p.t_submit
+            total_s = now - p.t_submit
+            self.telemetry.queue_wait.observe(queue_s)
+            self.telemetry.total.observe(total_s)
+            if not p.future.done():
+                p.future.set_result(ServiceResponse(
+                    request=p.request, result=result,
+                    queue_s=queue_s, dispatch_s=dt, total_s=total_s,
+                    cohort_size=len(live)))
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def export_stats(self, now: float | None = None) -> dict[str, Any]:
+        """Telemetry + cross-request cache + engine cache counters as
+        one JSON-serializable dict."""
+        out = self.telemetry.export(now)
+        out["cache"] = self.cache.stats()
+        out["engine"] = self.engine.stats.as_dict()
+        out["engine_hit_rates"] = {
+            k: self.engine.stats.hit_rate(k)
+            for k in ("result", "lookup", "lp", "hlo", "edge",
+                      "program", "classify", "machine")}
+        return out
+
+    def slo_model(self) -> SloModel:
+        """The analytic SLO self-model calibrated from this service's
+        own telemetry (see repro.service.slo)."""
+        return SloModel.from_telemetry(self.telemetry.export(),
+                                       self.config.batch_window_s)
+
+    def predict_slo(self) -> SloPrediction:
+        """Shorthand: build the self-model and predict p50/p99."""
+        return self.slo_model().predict()
+
+
+@dataclass
+class _Pending:
+    request: ServiceRequest
+    future: asyncio.Future
+    cache_key: tuple
+    t_submit: float
+    deadline: float
+    abandoned: bool = False
+
+
+def replay(service: PredictionService,
+           traffic: Sequence[tuple[float, ServiceRequest]],
+           ) -> list[ServiceResponse]:
+    """Synchronous mixed-traffic replay (the load harness entry point).
+
+    ``traffic`` is ``[(offset_s, request), ...]`` with offsets relative
+    to service start.  Starts the service, submits every request at its
+    offset, drains, stops, and returns the responses in input order —
+    admission rejections come back as error responses rather than
+    raising, so a replay is never torn down by one throttled tenant.
+    """
+    async def _go() -> list[ServiceResponse]:
+        await service.start()
+        out: list[ServiceResponse | None] = [None] * len(traffic)
+
+        async def one(i: int, offset: float, sreq: ServiceRequest):
+            await asyncio.sleep(offset)
+            try:
+                out[i] = await service.submit(sreq)
+            except (AdmissionError, ServiceClosed) as e:
+                out[i] = ServiceResponse(request=sreq, error=e)
+
+        await asyncio.gather(*(one(i, off, sreq)
+                               for i, (off, sreq) in enumerate(traffic)))
+        await service.stop()
+        return out                    # type: ignore[return-value]
+
+    return asyncio.run(_go())

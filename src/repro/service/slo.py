@@ -1,0 +1,235 @@
+"""Analytic SLO self-model: predict the predictor's own latency.
+
+The repo's prediction engine composes analytic bounds (port bound, LCD
+chain, ECM transfer terms) into a single headline number.  This module
+applies the same discipline to the *service wrapped around it*: from
+three inputs — per-class arrival rate, the batching window, and the
+measured per-dispatch cost — it predicts the p50/p99 response time a
+tenant will observe, using classic busy-period / response-time
+analysis for interfering flows (the holistic-analysis formulation;
+see PAPERS.md / ROADMAP for the lineage).
+
+Model
+-----
+Each cohort class ``j`` (one ``(kind, machine, mode, backend)`` key)
+is a *flow*: a dispatch of cost ``C_j`` released every ``T_j`` seconds
+(``T_j`` = elapsed / dispatches, i.e. the batch-former's actual
+release period, never below the batching window ``W``).  All flows
+share one dispatch executor, so a dispatch of class ``i`` can be
+delayed by the busy period of every other flow:
+
+* **busy period** (Eq. 6 style):
+  ``w = C_i + sum_j ceil((w + J_j) / T_j) * C_j``, iterated to a fixed
+  point;
+* **worst response** (Eq. 7/8 style): over the ``q``-th release inside
+  the busy period, ``R_i = max_q (v_q + C_i - q * T_i)`` with
+  ``v_q = q * C_i + interference(v_q)``.
+
+A request of class ``j`` then sees ``window wait + response``: the
+window wait is uniform on ``[0, W]`` (Poisson-ish arrivals within one
+batching window) and the response lies in ``[C_j, R_j]``, so its
+latency is modeled uniform on ``[C_j, R_j + W]``.  Overall service
+percentiles are the quantiles of the share-weighted *mixture* of those
+per-class distributions (solved by bisection on the piecewise-linear
+CDF).  Validation: ``benchmarks/service_bench.py`` replays mixed
+traffic and records measured vs. predicted percentiles into
+``BENCH_service.json``; CI gates the p99 prediction to within 50% of
+measurement.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Iterable, Mapping, Sequence
+
+
+@dataclass(frozen=True)
+class FlowSpec:
+    """One cohort class as a periodic interfering flow."""
+
+    name: str
+    cost_s: float       # C: mean dispatch cost
+    period_s: float     # T: mean inter-dispatch interval
+    share: float = 0.0  # fraction of requests belonging to this class
+    jitter_s: float = 0.0
+    # tail cost: the dispatch cost a *tail* request rides (defaults to
+    # the mean).  The service's warm dispatches are answered from the
+    # engine's memo caches at near-zero cost, which drags the mean
+    # down; the requests that define p99 ride cold dispatches, so the
+    # response-time recursion charges this cost for the flow's own
+    # dispatch while interference and utilization stay mean-based
+    # (mean x rate = the actual work the flow injects).
+    tail_cost_s: float | None = None
+
+    @property
+    def tail_cost(self) -> float:
+        return self.tail_cost_s if self.tail_cost_s is not None \
+            else self.cost_s
+
+    @property
+    def utilization(self) -> float:
+        return self.cost_s / self.period_s if self.period_s > 0 else \
+            float("inf")
+
+
+def busy_period_response(flow: FlowSpec,
+                         interfering: Sequence[FlowSpec],
+                         max_iter: int = 10_000) -> float:
+    """Worst-case response time of one flow under interference.
+
+    Returns ``inf`` when the flow set is unstable (total utilization
+    >= 1) or the iteration fails to converge within ``max_iter``.
+    """
+    total_util = flow.utilization + sum(f.utilization
+                                        for f in interfering)
+    if total_util >= 1.0:
+        return float("inf")
+
+    def interference(horizon: float) -> float:
+        return sum(math.ceil((horizon + f.jitter_s) / f.period_s)
+                   * f.cost_s for f in interfering)
+
+    # busy period w (fixed point, monotone increasing => converges
+    # under util < 1); the flow's own dispatch is charged at its tail
+    # cost (see FlowSpec.tail_cost_s)
+    own = flow.tail_cost
+    w = own
+    for _ in range(max_iter):
+        w_new = own + interference(w)
+        if abs(w_new - w) <= 1e-12:
+            break
+        w = w_new
+    else:
+        return float("inf")
+
+    n_releases = max(1, math.ceil((w + flow.jitter_s) / flow.period_s))
+    r_max = 0.0
+    for q in range(n_releases):
+        v = q * own
+        for _ in range(max_iter):
+            v_new = q * own + interference(v)
+            if abs(v_new - v) <= 1e-12:
+                break
+            v = v_new
+        else:
+            return float("inf")
+        r_max = max(r_max, v + own - q * flow.period_s)
+    return r_max
+
+
+def mixture_quantile(classes: Sequence[tuple[float, float, float]],
+                     q: float, iters: int = 80) -> float:
+    """Quantile of a mixture of uniforms ``[(share, lo, hi), ...]``.
+
+    The mixture CDF is piecewise linear and monotone; bisection over
+    ``[min lo, max hi]`` converges geometrically.
+    """
+    live = [(s, lo, max(hi, lo)) for s, lo, hi in classes if s > 0]
+    if not live:
+        return 0.0
+    total = sum(s for s, _, _ in live)
+    a = min(lo for _, lo, _ in live)
+    b = max(hi for _, _, hi in live)
+    if b <= a:
+        return a
+
+    def cdf(x: float) -> float:
+        acc = 0.0
+        for s, lo, hi in live:
+            if x >= hi:
+                acc += s
+            elif x > lo:
+                acc += s * (x - lo) / (hi - lo)
+        return acc / total
+
+    lo_x, hi_x = a, b
+    for _ in range(iters):
+        mid = 0.5 * (lo_x + hi_x)
+        if cdf(mid) < q:
+            lo_x = mid
+        else:
+            hi_x = mid
+    return 0.5 * (lo_x + hi_x)
+
+
+@dataclass
+class SloPrediction:
+    """Predicted service percentiles plus the per-class breakdown."""
+
+    p50_s: float
+    p99_s: float
+    utilization: float
+    per_class: dict[str, dict[str, float]]
+
+    def as_dict(self) -> dict[str, Any]:
+        return {"p50_s": self.p50_s, "p99_s": self.p99_s,
+                "utilization": self.utilization,
+                "per_class": self.per_class}
+
+
+class SloModel:
+    """Busy-period latency model of one :class:`PredictionService`."""
+
+    def __init__(self, window_s: float, flows: Iterable[FlowSpec]):
+        self.window_s = window_s
+        self.flows = list(flows)
+
+    @classmethod
+    def from_telemetry(cls, export: Mapping[str, Any],
+                       window_s: float) -> "SloModel":
+        """Build the flow set from a ``Telemetry.export()`` dict.
+
+        ``C_j`` is the measured mean dispatch cost of class ``j``
+        (mean x release rate = the work the flow actually injects, so
+        utilization and interference stay consistent) and its tail
+        cost is the p90 (warm engine-cached dispatches cost near zero
+        and would dilute the cold-dispatch cost that governs p99);
+        ``T_j`` is the observed release period (elapsed time over
+        dispatch count), floored at the batching window — the service
+        cannot release one class faster than it forms cohorts.
+        """
+        elapsed = float(export.get("elapsed_s") or 0.0)
+        classes = export.get("cohort_classes", {})
+        total_requests = sum(int(c.get("requests", 0))
+                             for c in classes.values()) or 1
+        flows = []
+        for name, c in classes.items():
+            dispatches = int(c.get("dispatches", 0))
+            if dispatches <= 0:
+                continue
+            cost = float(c["cost"]["mean_s"])
+            tail = float(c["cost"].get("p90_s") or cost)
+            period = max(window_s, elapsed / dispatches) \
+                if elapsed > 0 else max(window_s, cost)
+            # jitter of one batching window: cohorts formed by the same
+            # drain cycle release *simultaneously*, so an interfering
+            # flow must count at least one release at t=0 — exactly
+            # what a release jitter >= its phase slack encodes in the
+            # holistic formulation
+            flows.append(FlowSpec(
+                name=name, cost_s=cost, period_s=max(period, 1e-9),
+                share=int(c.get("requests", 0)) / total_requests,
+                jitter_s=window_s, tail_cost_s=max(tail, cost)))
+        return cls(window_s=window_s, flows=flows)
+
+    def predict(self) -> SloPrediction:
+        per_class: dict[str, dict[str, float]] = {}
+        mixture: list[tuple[float, float, float]] = []
+        for flow in self.flows:
+            others = [f for f in self.flows if f is not flow]
+            resp = busy_period_response(flow, others)
+            lo = flow.cost_s
+            hi = (resp if math.isfinite(resp) else flow.cost_s) \
+                + self.window_s
+            per_class[flow.name] = {
+                "cost_s": flow.cost_s, "period_s": flow.period_s,
+                "share": flow.share, "response_s": resp,
+                "p50_s": lo + 0.5 * (hi - lo),
+                "p99_s": lo + 0.99 * (hi - lo),
+            }
+            mixture.append((flow.share, lo, hi))
+        util = sum(f.utilization for f in self.flows)
+        return SloPrediction(
+            p50_s=mixture_quantile(mixture, 0.50),
+            p99_s=mixture_quantile(mixture, 0.99),
+            utilization=util, per_class=per_class)

@@ -1,0 +1,439 @@
+"""Unit tests for the persistent prediction service (``repro.service``).
+
+One class of tests per layer:
+
+* admission control — bounded global/tenant depth, token-bucket rate
+  limiting, slot release (pure bookkeeping, caller-supplied clock);
+* cross-request cache — LRU eviction order, TTL expiry, purge,
+  hit-rate accounting;
+* telemetry — histogram percentiles, per-tenant counters, export
+  shape;
+* SLO self-model — busy-period response times against hand-computed
+  fixed points, mixture quantiles against closed-form CDF inverses,
+  calibration from a synthetic telemetry export;
+* service lifecycle — deadline expiry, dispatch retry/failure
+  surfaced as responses, closed-service submits, cancellation
+  bookkeeping, ``export_stats`` shape;
+* engine robustness hooks — ``predict_async`` timeout/retry semantics
+  and ``drop_results`` program reuse (the sweep-bench cache gate).
+"""
+import asyncio
+import time
+
+import pytest
+
+from repro.core import AnalysisRequest, AnalysisService
+from repro.core import paper_kernels as pk
+from repro.service import (AdmissionController, AdmissionError,
+                           DeadlineExceeded, DispatchError, FlowSpec,
+                           HloRequest, LatencyHistogram,
+                           PredictionService, ServiceClosed,
+                           ServiceConfig, ServiceRequest, SloModel,
+                           TTLCache, TenantPolicy,
+                           busy_period_response, mixture_quantile,
+                           replay)
+
+
+# ---------------------------------------------------------------- admission
+
+def test_admission_global_depth():
+    ac = AdmissionController(max_queue_depth=2)
+    ac.admit("a", now=0.0)
+    ac.admit("b", now=0.0)
+    with pytest.raises(AdmissionError) as ei:
+        ac.admit("c", now=0.0)
+    assert ei.value.reason == "queue_depth"
+    assert ei.value.tenant == "c"
+    ac.release("a")
+    ac.admit("c", now=0.0)       # slot freed
+    assert ac.total_in_flight == 2
+
+
+def test_admission_tenant_depth():
+    ac = AdmissionController(
+        max_queue_depth=100,
+        default_policy=TenantPolicy(max_in_flight=2))
+    ac.admit("a", 0.0)
+    ac.admit("a", 0.0)
+    with pytest.raises(AdmissionError) as ei:
+        ac.admit("a", 0.0)
+    assert ei.value.reason == "tenant_depth"
+    ac.admit("b", 0.0)           # other tenants unaffected
+
+
+def test_admission_rate_limit_refills():
+    ac = AdmissionController(
+        max_queue_depth=100,
+        default_policy=TenantPolicy(max_in_flight=100,
+                                    rate_per_s=10.0, burst=2.0))
+    ac.admit("a", 0.0)
+    ac.admit("a", 0.0)           # burst of 2 OK
+    with pytest.raises(AdmissionError) as ei:
+        ac.admit("a", 0.0)
+    assert ei.value.reason == "rate"
+    # 0.1 s later one token has refilled
+    ac.admit("a", 0.1)
+    with pytest.raises(AdmissionError):
+        ac.admit("a", 0.1)
+
+
+def test_admission_per_tenant_policy_overrides_default():
+    ac = AdmissionController(
+        max_queue_depth=100,
+        default_policy=TenantPolicy(max_in_flight=1),
+        per_tenant={"vip": TenantPolicy(max_in_flight=3)})
+    ac.admit("vip", 0.0)
+    ac.admit("vip", 0.0)
+    ac.admit("vip", 0.0)
+    with pytest.raises(AdmissionError):
+        ac.admit("other", 0.0) or ac.admit("other", 0.0)
+
+
+def test_release_never_goes_negative():
+    ac = AdmissionController()
+    ac.release("ghost")
+    assert ac.total_in_flight == 0
+    ac.admit("a", 0.0)
+    ac.release("a")
+    ac.release("a")
+    assert ac.total_in_flight == 0
+
+
+# -------------------------------------------------------------------- cache
+
+def test_ttl_cache_lru_eviction():
+    c = TTLCache(max_entries=2)
+    c.put("a", 1, now=0)
+    c.put("b", 2, now=0)
+    assert c.get("a", now=0) == 1    # refresh a
+    c.put("c", 3, now=0)             # evicts b (least recently used)
+    assert c.get("b", now=0) is None
+    assert c.get("a", now=0) == 1
+    assert c.get("c", now=0) == 3
+    assert c.stats()["evictions"] == 1
+
+
+def test_ttl_cache_expiry_and_purge():
+    c = TTLCache(max_entries=10, ttl_s=1.0)
+    c.put("a", 1, now=0.0)
+    c.put("b", 2, now=0.5)
+    assert c.get("a", now=0.9) == 1
+    assert c.get("a", now=1.1) is None      # expired
+    assert c.expirations == 1
+    assert c.purge(now=2.0) == 1            # reaps b
+    assert len(c) == 0
+
+
+def test_ttl_cache_hit_rate():
+    c = TTLCache()
+    assert c.hit_rate() == 0.0
+    c.put("k", "v")
+    c.get("k")
+    c.get("nope")
+    assert c.hit_rate() == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------- telemetry
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for ms in range(1, 101):
+        h.observe(ms / 1000.0)
+    d = h.as_dict()
+    assert d["count"] == 100
+    # log-bucketed: percentiles are approximate, but must bracket
+    assert 0.03 <= d["p50_s"] <= 0.08
+    assert 0.08 <= d["p99_s"] <= 0.15
+    assert d["max_s"] == pytest.approx(0.1)
+    assert d["mean_s"] == pytest.approx(0.0505, rel=0.01)
+
+
+def test_latency_histogram_empty():
+    d = LatencyHistogram().as_dict()
+    assert d["count"] == 0
+    assert d["p99_s"] == 0.0
+
+
+# ---------------------------------------------------------------- SLO model
+
+def test_busy_period_no_interference_is_cost():
+    assert busy_period_response(FlowSpec("a", 2.0, 10.0), []) == \
+        pytest.approx(2.0)
+
+
+def test_busy_period_hand_computed_fixed_point():
+    # flow C=1 T=4; interferer C=1 T=2 J=2:
+    #   w  = 1 + ceil((w+2)/2)        -> w = 4
+    #   v0 = ceil((v0+2)/2)           -> v0 = 2, R = v0 + C = 3
+    flow = FlowSpec("a", 1.0, 4.0)
+    other = FlowSpec("b", 1.0, 2.0, jitter_s=2.0)
+    assert busy_period_response(flow, [other]) == pytest.approx(3.0)
+
+
+def test_busy_period_zero_jitter_misses_simultaneous_release():
+    # the subtlety the service's calibration must compensate for:
+    # with zero jitter an interferer contributes nothing at v=0
+    flow = FlowSpec("a", 1.0, 4.0)
+    other = FlowSpec("b", 1.0, 2.0, jitter_s=0.0)
+    assert busy_period_response(flow, [other]) == pytest.approx(1.0)
+
+
+def test_busy_period_unstable_is_inf():
+    flow = FlowSpec("a", 1.0, 1.5)
+    other = FlowSpec("b", 1.0, 2.0)
+    assert busy_period_response(flow, [other]) == float("inf")
+
+
+def test_mixture_quantile_single_uniform():
+    assert mixture_quantile([(1.0, 0.0, 1.0)], 0.5) == \
+        pytest.approx(0.5, abs=1e-6)
+    assert mixture_quantile([(1.0, 0.0, 1.0)], 0.99) == \
+        pytest.approx(0.99, abs=1e-6)
+
+
+def test_mixture_quantile_two_class_closed_form():
+    classes = [(0.5, 0.0, 1.0), (0.5, 1.0, 3.0)]
+    assert mixture_quantile(classes, 0.25) == pytest.approx(0.5,
+                                                            abs=1e-6)
+    assert mixture_quantile(classes, 0.75) == pytest.approx(2.0,
+                                                            abs=1e-6)
+
+
+def test_mixture_quantile_degenerate():
+    assert mixture_quantile([], 0.5) == 0.0
+    assert mixture_quantile([(1.0, 2.0, 2.0)], 0.99) == \
+        pytest.approx(2.0)
+
+
+def test_slo_model_from_synthetic_telemetry():
+    export = {
+        "elapsed_s": 10.0,
+        "cohort_classes": {
+            "x86/aaaa/simulate/numpy": {
+                "dispatches": 5, "requests": 80,
+                "cost": {"mean_s": 0.4}},
+            "hlo/bbbb/analytic/none": {
+                "dispatches": 10, "requests": 20,
+                "cost": {"mean_s": 0.01}},
+            "dead/class": {"dispatches": 0, "requests": 0,
+                           "cost": {"mean_s": 0.0}},
+        },
+    }
+    model = SloModel.from_telemetry(export, window_s=0.02)
+    assert len(model.flows) == 2          # dispatch-free class dropped
+    by_name = {f.name: f for f in model.flows}
+    sim = by_name["x86/aaaa/simulate/numpy"]
+    assert sim.cost_s == pytest.approx(0.4)
+    assert sim.period_s == pytest.approx(2.0)   # 10 s / 5 dispatches
+    assert sim.share == pytest.approx(0.8)
+    assert sim.jitter_s == pytest.approx(0.02)
+
+    pred = model.predict()
+    assert 0.0 < pred.p50_s <= pred.p99_s
+    assert pred.utilization == pytest.approx(0.4 / 2.0 + 0.01 / 1.0)
+    assert set(pred.per_class) == set(by_name)
+
+
+# ----------------------------------------------------------- request shapes
+
+def test_service_request_requires_exactly_one_payload():
+    with pytest.raises(ValueError):
+        ServiceRequest()
+    with pytest.raises(ValueError):
+        ServiceRequest(analysis=AnalysisRequest(kernel=pk.PI_O1,
+                                                arch="skl"),
+                       hlo=HloRequest(text="HloModule x"))
+    assert ServiceRequest(analysis=AnalysisRequest(
+        kernel=pk.PI_O1, arch="skl")).kind == "x86"
+    assert ServiceRequest(hlo=HloRequest(text="HloModule x")).kind \
+        == "hlo"
+
+
+# -------------------------------------------------------- service lifecycle
+
+def _req(unroll: int = 1, tenant: str = "t") -> ServiceRequest:
+    return ServiceRequest(analysis=AnalysisRequest(
+        kernel=pk.PI_O1, arch="skl", unroll_factor=unroll),
+        tenant=tenant)
+
+
+def test_submit_on_stopped_service_raises():
+    svc = PredictionService()
+
+    async def go():
+        with pytest.raises(ServiceClosed):
+            await svc.submit(_req())
+
+    asyncio.run(go())
+
+
+def test_replay_basic_and_cache_hit():
+    svc = PredictionService(config=ServiceConfig(batch_window_s=0.005))
+    resps = replay(svc, [(0.0, _req()), (0.0, _req(unroll=2))])
+    assert all(r.ok for r in resps)
+    assert all(not r.cache_hit for r in resps)
+    assert all(r.cohort_size >= 1 for r in resps)
+    # second replay on the same (warm) service: pure cache hits
+    resps2 = replay(svc, [(0.0, _req()), (0.0, _req(unroll=2))])
+    assert all(r.ok and r.cache_hit for r in resps2)
+    assert resps2[0].result is resps[0].result
+    stats = svc.export_stats()
+    assert stats["cache"]["hits"] == 2
+    assert stats["tenants"]["t"]["completed"] == 4
+
+
+def test_deadline_exceeded_comes_back_as_response():
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=0.005, max_retries=0))
+    real = svc.engine.predict_batch
+
+    def slow(reqs, backend=None):
+        time.sleep(0.4)
+        return real(reqs, backend=backend)
+
+    svc.engine.predict_batch = slow
+    resp = replay(svc, [(0.0, ServiceRequest(
+        analysis=AnalysisRequest(kernel=pk.PI_O1, arch="skl"),
+        timeout_s=0.05))])[0]
+    assert not resp.ok
+    assert isinstance(resp.error, DeadlineExceeded)
+    assert svc.telemetry.tenant("default").deadline_exceeded == 1
+
+
+def test_dispatch_retry_then_success():
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=0.005, max_retries=2, retry_backoff_s=0.01))
+    real = svc.engine.predict_batch
+    calls = {"n": 0}
+
+    def flaky(reqs, backend=None):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return real(reqs, backend=backend)
+
+    svc.engine.predict_batch = flaky
+    resp = replay(svc, [(0.0, _req())])[0]
+    assert resp.ok
+    assert calls["n"] == 2
+
+
+def test_dispatch_permanent_failure_is_dispatch_error():
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=0.005, max_retries=1, retry_backoff_s=0.01))
+
+    def broken(reqs, backend=None):
+        raise RuntimeError("boom")
+
+    svc.engine.predict_batch = broken
+    resp = replay(svc, [(0.0, _req())])[0]
+    assert not resp.ok
+    assert isinstance(resp.error, DispatchError)
+    assert "boom" in str(resp.error)
+    assert svc.telemetry.tenant("t").failed == 1
+    # admission slot was released despite the failure
+    assert svc.admission.total_in_flight == 0
+
+
+def test_rejected_requests_surface_in_replay():
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=0.005,
+        default_policy=TenantPolicy(max_in_flight=1, rate_per_s=1.0,
+                                    burst=1.0)))
+    resps = replay(svc, [(0.0, _req(unroll=1 + i)) for i in range(6)])
+    rejected = [r for r in resps if isinstance(r.error, AdmissionError)]
+    served = [r for r in resps if r.ok]
+    assert rejected and served
+    assert svc.telemetry.tenant("t").rejected == len(rejected)
+
+
+def test_export_stats_shape():
+    svc = PredictionService(config=ServiceConfig(batch_window_s=0.005))
+    replay(svc, [(0.0, _req())])
+    stats = svc.export_stats()
+    for key in ("elapsed_s", "stages", "batch_size", "queue_depth",
+                "tenants", "cohort_classes", "engine_dispatches",
+                "cache", "engine_hit_rates", "traces"):
+        assert key in stats, key
+    assert stats["stages"]["dispatch"]["count"] >= 1
+    (cls,) = stats["cohort_classes"].values()
+    assert cls["dispatches"] == 1
+    assert cls["requests"] == 1
+    model = svc.slo_model()
+    assert model.flows
+    pred = svc.predict_slo()
+    assert pred.p99_s >= pred.p50_s >= 0.0
+
+
+# ------------------------------------------------- engine robustness hooks
+
+def test_predict_async_timeout():
+    engine = AnalysisService()
+
+    def slow(request):
+        time.sleep(0.5)
+
+    engine.predict = slow
+
+    async def go():
+        with pytest.raises(asyncio.TimeoutError):
+            await engine.predict_async(
+                AnalysisRequest(kernel=pk.PI_O1, arch="skl"),
+                timeout=0.05)
+
+    asyncio.run(go())
+
+
+def test_predict_async_retries_transient_then_succeeds():
+    engine = AnalysisService()
+    real = engine.predict
+    calls = {"n": 0}
+
+    def flaky(request):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return real(request)
+
+    engine.predict = flaky
+
+    async def go():
+        return await engine.predict_async(
+            AnalysisRequest(kernel=pk.PI_O1, arch="skl"),
+            retries=2, backoff_s=0.01)
+
+    result = asyncio.run(go())
+    assert calls["n"] == 2
+    assert result.predicted_cycles > 0
+
+
+def test_predict_async_never_retries_value_error():
+    engine = AnalysisService()
+    calls = {"n": 0}
+
+    def bad(request):
+        calls["n"] += 1
+        raise ValueError("no such arch")
+
+    engine.predict = bad
+
+    async def go():
+        with pytest.raises(ValueError):
+            await engine.predict_async(
+                AnalysisRequest(kernel=pk.PI_O1, arch="skl"),
+                retries=5, backoff_s=0.01)
+
+    asyncio.run(go())
+    assert calls["n"] == 1
+
+
+def test_drop_results_keeps_compiled_programs():
+    engine = AnalysisService()
+    req = AnalysisRequest(kernel=pk.PI_O1, arch="skl", mode="simulate")
+    engine.predict(req)
+    sims_before = engine.stats.sim_runs
+    hits_before = engine.stats.program_hits
+    engine.drop_results()
+    engine.predict(req)                      # re-simulates ...
+    assert engine.stats.sim_runs == sims_before + 1
+    assert engine.stats.program_hits > hits_before   # ... same program

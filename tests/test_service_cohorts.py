@@ -1,0 +1,224 @@
+"""Property tests for the service's cohort/batch former.
+
+Satellite guarantees of the prediction service (``repro.service``):
+
+* ``form_cohorts`` is a *partition* of the in-flight request list —
+  every request lands in exactly one cohort, no index is dropped or
+  duplicated, regardless of the traffic mix (hypothesis);
+* a cohort never mixes incompatible requests: all members share one
+  ``cohort_key`` — same kind (x86 vs HLO), same resolved machine
+  digest, same mode, same backend (and same pricing knobs for HLO);
+* ``max_cohort`` splits oversized cohorts without breaking either
+  property;
+* batching is *semantically invisible*: results produced through the
+  batched dispatch path are bit-identical to per-request
+  ``AnalysisService.predict`` on a fresh engine — for the analytic
+  path under hypothesis-generated mixes, and for the full
+  queue → cohort → ``simulate_many`` service path on the matched
+  kernel x arch grid (the pairs pinned identical across simulator
+  drivers by tests/test_sweep_engine.py).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # optional [dev] dependency
+    from repro.testing import given, settings, st
+
+from repro.core import AnalysisRequest, AnalysisService, default_service
+from repro.core import paper_kernels as pk
+from repro.service import (HloRequest, PredictionService, ServiceConfig,
+                           ServiceRequest, cohort_key, form_cohorts,
+                           is_partition, replay)
+
+SERVICE = default_service()
+
+HLO_A = """
+HloModule a, entry_computation_layout={()->f32[64,64]{1,0}}
+
+ENTRY %main.1 () -> f32[64,64] {
+  %a = f32[64,64]{1,0} constant({...})
+  ROOT %d = f32[64,64]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+HLO_B = """
+HloModule b, entry_computation_layout={()->f32[128,128]{1,0}}
+
+ENTRY %main.1 () -> f32[128,128] {
+  %a = f32[128,128]{1,0} constant({...})
+  %x = f32[128,128]{1,0} add(%a, %a)
+  ROOT %d = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+# matched kernel x arch pairs: every driver (tick loop, numpy batch,
+# jit batch) is pinned bit-identical on these by the sweep-engine suite
+MATCHED = [("skl", pk.TRIAD_SKL_O3), ("zen", pk.TRIAD_ZEN_O3),
+           ("skl", pk.PI_O1), ("zen", pk.PI_O1),
+           ("skl", pk.PI_O2), ("zen", pk.PI_O2),
+           ("skl", pk.PI_SKL_O3), ("zen", pk.PI_ZEN_O3)]
+
+
+def _request_pool() -> list[ServiceRequest]:
+    pool = []
+    for arch, src in MATCHED:
+        for mode in ("analytic", "simulate"):
+            for sched in ("uniform", "balanced"):
+                for backend in (None, "numpy"):
+                    pool.append(ServiceRequest(
+                        analysis=AnalysisRequest(
+                            kernel=src, arch=arch, scheduler=sched,
+                            mode=mode),
+                        backend=backend, tenant="t%d" % (len(pool) % 3)))
+    for text in (HLO_A, HLO_B):
+        for ici in (1.0, 2.0):
+            for dtype in ("bf16", "f32"):
+                pool.append(ServiceRequest(
+                    hlo=HloRequest(text=text, ici_links=ici,
+                                   flop_dtype=dtype),
+                    tenant="hlo"))
+    return pool
+
+
+POOL = _request_pool()
+
+
+def _signature(sreq: ServiceRequest, result) -> tuple:
+    if sreq.analysis is not None:
+        return (result.predicted_cycles, result.port_bound_cycles,
+                result.lcd_cycles, result.bound_sim, result.binding)
+    t = result.terms
+    return (t.bound_combined, t.bound_overlap, t.critical_path_s)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=len(POOL) - 1),
+                min_size=0, max_size=40),
+       st.one_of(st.none(), st.integers(min_value=1, max_value=5)))
+def test_cohorts_partition_and_never_mix(idxs, max_cohort):
+    """form_cohorts partitions any traffic mix; members always agree
+    on the full cohort key; max_cohort caps cohort size."""
+    requests = [POOL[i] for i in idxs]
+    cohorts = form_cohorts(SERVICE, requests, max_cohort=max_cohort)
+
+    assert is_partition(cohorts, len(requests))
+    seen = sorted(i for _, members in cohorts for i in members)
+    assert seen == list(range(len(requests)))
+
+    for key, members in cohorts:
+        assert members, "empty cohort emitted"
+        if max_cohort is not None:
+            assert len(members) <= max_cohort
+        for i in members:
+            assert cohort_key(SERVICE, requests[i]) == key
+
+    # no two cohorts share a key unless forced apart by max_cohort
+    if max_cohort is None:
+        keys = [k for k, _ in cohorts]
+        assert len(keys) == len(set(keys))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=len(POOL) - 1),
+                min_size=1, max_size=40))
+def test_cohorts_never_mix_incompatible(idxs):
+    """Explicit incompatibility axes: kind, machine digest, mode,
+    backend (and HLO pricing knobs) are constant within a cohort."""
+    requests = [POOL[i] for i in idxs]
+    for _, members in form_cohorts(SERVICE, requests):
+        group = [requests[i] for i in members]
+        kinds = {r.kind for r in group}
+        assert len(kinds) == 1
+        if kinds == {"x86"}:
+            digests = {SERVICE.resolve_machine(r.analysis.arch).digest
+                       for r in group}
+            modes = {r.analysis.mode for r in group}
+        else:
+            digests = {SERVICE.resolve_machine(r.hlo.machine).digest
+                       for r in group}
+            modes = {r.hlo.mode for r in group}
+            assert len({(r.hlo.ici_links, r.hlo.flop_dtype,
+                         r.hlo.working_set) for r in group}) == 1
+        assert len(digests) == 1
+        assert len(modes) == 1
+        assert len({r.backend for r in group}) == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(
+    st.integers(min_value=0, max_value=len(MATCHED) - 1),
+    st.sampled_from(["uniform", "balanced"])),
+    min_size=1, max_size=8))
+def test_analytic_batch_identical_to_per_request(cells):
+    """predict_batch == predict, field for field, on fresh engines."""
+    reqs = [AnalysisRequest(kernel=MATCHED[i][1], arch=MATCHED[i][0],
+                            scheduler=sched) for i, sched in cells]
+    batched = AnalysisService().predict_batch(reqs)
+    serial_engine = AnalysisService()
+    for req, got in zip(reqs, batched):
+        want = serial_engine.predict(req)
+        assert _signature(ServiceRequest(analysis=req), got) == \
+            _signature(ServiceRequest(analysis=req), want)
+
+
+def test_service_batched_results_bit_identical():
+    """The full queue -> cohort -> simulate_many service path returns
+    bit-identical results to per-request predict on a fresh engine,
+    for a mixed simulate/analytic/HLO traffic burst."""
+    traffic = []
+    for i, (arch, src) in enumerate(MATCHED[:4]):
+        traffic.append((0.0, ServiceRequest(
+            analysis=AnalysisRequest(kernel=src, arch=arch,
+                                     mode="simulate"),
+            tenant="a" if i % 2 else "b")))
+    traffic.append((0.0, ServiceRequest(
+        analysis=AnalysisRequest(kernel=pk.PI_O1, arch="skl"),
+        tenant="a")))
+    traffic.append((0.0, ServiceRequest(hlo=HloRequest(text=HLO_A),
+                                        tenant="b")))
+
+    svc = PredictionService(config=ServiceConfig(
+        batch_window_s=0.01, backend="numpy"))
+    resps = replay(svc, traffic)
+    assert all(r.ok for r in resps), [r.error for r in resps]
+    # batching actually happened: the 4 simulate cells form 2 cohorts
+    # (one per machine model), not 4 singleton dispatches
+    sim_sizes = [r.cohort_size for r in resps[:4]]
+    assert max(sim_sizes) >= 2
+
+    engine = AnalysisService()
+    for (_, sreq), resp in zip(traffic, resps):
+        if sreq.analysis is not None:
+            want = engine.predict(sreq.analysis)
+        else:
+            want = engine.predict_hlo(sreq.hlo.text)
+        assert _signature(sreq, resp.result) == _signature(sreq, want)
+
+
+def test_cohort_key_distinguishes_machines_and_modes():
+    r_skl = ServiceRequest(analysis=AnalysisRequest(kernel=pk.PI_O1,
+                                                    arch="skl"))
+    r_zen = ServiceRequest(analysis=AnalysisRequest(kernel=pk.PI_O1,
+                                                    arch="zen"))
+    r_sim = ServiceRequest(analysis=AnalysisRequest(
+        kernel=pk.PI_O1, arch="skl", mode="simulate"))
+    r_hlo = ServiceRequest(hlo=HloRequest(text=HLO_A))
+    keys = {cohort_key(SERVICE, r) for r in
+            (r_skl, r_zen, r_sim, r_hlo)}
+    assert len(keys) == 4
+
+    # same machine resolved under an alias must share a cohort
+    assert cohort_key(SERVICE, r_skl) == cohort_key(
+        SERVICE, ServiceRequest(analysis=AnalysisRequest(
+            kernel=pk.PI_O1, arch="skylake")))
+
+
+def test_oversized_cohort_split_is_stable():
+    requests = [ServiceRequest(analysis=AnalysisRequest(
+        kernel=pk.PI_O1, arch="skl", unroll_factor=1 + i))
+        for i in range(7)]
+    cohorts = form_cohorts(SERVICE, requests, max_cohort=3)
+    assert [len(m) for _, m in cohorts] == [3, 3, 1]
+    assert is_partition(cohorts, len(requests))
+    flat = [i for _, m in cohorts for i in m]
+    assert flat == list(range(7))
