@@ -213,6 +213,73 @@ def admission_probe() -> dict:
                  if isinstance(r.error, AdmissionError)})}
 
 
+def chaos_probe() -> dict:
+    """Persistent single-backend failure must degrade, never drop.
+
+    A fault plan kills every dispatch on the primary simulation
+    backend; the degradation ladder (docs/robustness.md) must demote
+    each affected cohort down the rungs, every admitted request must
+    still resolve, affected responses must carry ``degraded=True``
+    with the fallback backend recorded, and the circuit breaker must
+    visibly open and half-open across replay rounds."""
+    from repro.core import (AnalysisService, BreakerConfig, FaultPlan,
+                            FaultSpec)
+    from repro.core.engine import AnalysisRequest
+    from repro.core.sim import has_jax
+    from repro.service import (PredictionService, ServiceConfig,
+                               ServiceRequest, replay)
+
+    primary = "jit" if has_jax() else "numpy"
+    plan = FaultPlan(specs=(
+        FaultSpec(point="engine.dispatch", mode="fail",
+                  match={"backend": primary}),))
+    engine = AnalysisService(
+        faults=plan,
+        breaker_config=BreakerConfig(failure_threshold=1,
+                                     cooldown_s=0.05))
+    svc = PredictionService(engine, ServiceConfig(
+        batch_window_s=0.01, backend=primary,
+        cache_ttl_s=0.0))       # no cross-request hits: every round
+    #                             must re-enter the engine
+
+    cells = _sweep_cells()
+    rounds = 3
+    resolved = 0
+    degraded = []
+    for r in range(rounds):
+        burst = [(0.0, ServiceRequest(
+            analysis=AnalysisRequest(kernel=src, arch=arch,
+                                     mode="simulate"),
+            tenant="chaos", tag=f"round{r}")) for arch, src in cells]
+        resps = replay(svc, burst)
+        resolved += sum(1 for x in resps if x.ok or x.error is not None)
+        degraded += [x for x in resps if x.ok and x.degraded]
+        # past the breaker cooldown, so the next round probes the dead
+        # primary rung through half_open instead of skipping it while
+        # open; drop the memoized results so the cohort re-dispatches
+        time.sleep(0.08)
+        svc.engine.drop_results()
+
+    snap = engine.breakers.snapshot()
+    transitions = {e["to"] for e in snap["events"]}
+    fallbacks = sorted({x.backend_used for x in degraded})
+    return {
+        "primary_backend": primary,
+        "requests": rounds * len(cells),
+        "resolved": resolved,
+        "dropped": rounds * len(cells) - resolved,
+        "degraded_responses": len(degraded),
+        "fallback_backends": fallbacks,
+        "fallback_recorded": bool(degraded) and all(
+            x.backend_used and x.backend_used != primary
+            for x in degraded),
+        "breaker_transitions": sorted(transitions),
+        "breaker_opened": "open" in transitions,
+        "breaker_half_opened": "half_open" in transitions,
+        "fault_events": engine.faults.summary(),
+    }
+
+
 def run_bench(fast: bool = False) -> dict:
     from repro.service import PredictionService, ServiceConfig, replay
 
@@ -302,6 +369,7 @@ def run_bench(fast: bool = False) -> dict:
         "tenants": stats["tenants"],
         "engine_hit_rates": stats["engine_hit_rates"],
         "admission_probe": admission_probe(),
+        "chaos_probe": chaos_probe(),
     }
     return report
 
@@ -340,6 +408,12 @@ def main() -> None:
     ap_ = report["admission_probe"]
     print(f"admission probe: {ap_['rejected']}/{ap_['requests']} "
           f"rejected ({', '.join(ap_['rejected_reasons'])})")
+    cp = report["chaos_probe"]
+    print(f"chaos probe [{cp['primary_backend']} down]: "
+          f"{cp['resolved']}/{cp['requests']} resolved, "
+          f"{cp['degraded_responses']} degraded via "
+          f"{', '.join(cp['fallback_backends']) or '-'}; breaker "
+          f"transitions: {', '.join(cp['breaker_transitions']) or '-'}")
     print(f"wrote {args.out}")
 
     if args.check:
@@ -365,6 +439,17 @@ def main() -> None:
                             "cache hits")
         if not ap_["rejected"]:
             failures.append("admission probe rejected nothing")
+        if cp["dropped"]:
+            failures.append(f"chaos probe dropped {cp['dropped']} "
+                            "requests under single-backend failure")
+        if not (cp["degraded_responses"] and cp["fallback_recorded"]):
+            failures.append("chaos probe responses not flagged "
+                            "degraded with a fallback backend "
+                            "recorded")
+        if not (cp["breaker_opened"] and cp["breaker_half_opened"]):
+            failures.append(
+                f"breaker open/half-open not visible in telemetry "
+                f"(saw: {cp['breaker_transitions']})")
         if failures:
             for f_ in failures:
                 print(f"FAIL: {f_}", file=sys.stderr)

@@ -209,6 +209,64 @@ def bench_sweep(cells_target: int = 1024) -> dict:
     }
 
 
+def bench_resume() -> dict:
+    """Crash-safe resume probe (docs/robustness.md): journal a sweep,
+    kill it mid-flight with an injected abort, resume from the journal
+    and demand a bit-identical grid with zero re-dispatch of the
+    journaled machine group."""
+    import tempfile
+
+    from repro.core import AnalysisService, FaultPlan, FaultSpec
+    from repro.core import paper_kernels as pk
+    from repro.core.faults import FaultAbort
+
+    kernels = {"triad_skl": pk.TRIAD_SKL_O3, "pi_o2": pk.PI_O2}
+    sweep_kw = dict(archs=("skl", "zen"), schedulers=("uniform",),
+                    mode="simulate")
+
+    t0 = time.perf_counter()
+    reference = AnalysisService(sim_backend="numpy").sweep(
+        kernels, **sweep_kw)
+    ref_dt = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as td:
+        # the second engine.dispatch fire (the zen machine group) dies
+        # the way a SIGKILL would: no containment, no ladder, the sweep
+        # call never returns.  The skl group's record is already on
+        # disk by then — RecordJournal.append is atomic per record.
+        plan = FaultPlan(specs=(
+            FaultSpec(point="engine.dispatch", mode="abort", skip=1),))
+        killed = AnalysisService(sim_backend="numpy", faults=plan)
+        aborted = False
+        try:
+            killed.sweep(kernels, journal=td, **sweep_kw)
+        except FaultAbort:
+            aborted = True
+
+        resumed_svc = AnalysisService(sim_backend="numpy")
+        t1 = time.perf_counter()
+        resumed = resumed_svc.sweep(kernels, journal=td,
+                                    resume_from=td, **sweep_kw)
+        resume_dt = time.perf_counter() - t1
+
+    identical = (set(resumed) == set(reference) and all(
+        (resumed[k].predicted_cycles, resumed[k].bound_sim,
+         resumed[k].binding)
+        == (reference[k].predicted_cycles, reference[k].bound_sim,
+            reference[k].binding)
+        for k in reference))
+    s = resumed_svc.stats
+    return {
+        "cells": len(reference),
+        "aborted_mid_sweep": aborted,
+        "journal_hits": s.journal_hits,
+        "group_dispatches_on_resume": s.sim_group_dispatches,
+        "resume_bit_identical": identical,
+        "reference_seconds": round(ref_dt, 4),
+        "resume_seconds": round(resume_dt, 4),
+    }
+
+
 def run_bench(fast: bool = False) -> dict:
     from repro.core.sim import AUTO_JIT_MIN_BATCH, JIT_SHARD, has_jax
 
@@ -223,9 +281,16 @@ def run_bench(fast: bool = False) -> dict:
                    "jax_available": has_jax()},
         "batches": bench_batches(batches, repeats=1 if fast else 2),
         "sweep": bench_sweep(256 if fast else 1024),
+        "resume": bench_resume(),
     }
     gate_rows = [r for r in report["batches"]
                  if r["batch"] >= 64 and "jit" in r["backends"]]
+    # the jit-vs-numpy speedup scales with how many cores the shard
+    # pool gets; 10x was measured on a 16-core host.  Scale the target
+    # to this container so the gate carries signal instead of being a
+    # hard false on the 2-core CI reference (docs/performance.md)
+    cores = os.cpu_count() or 1
+    scale_target = max(1.0, 10.0 * cores / 16)
     # both 10x readings are recorded so the trajectory is honest about
     # what is and is not met on this host: vs the legacy per-point hot
     # path the planner replaced, and vs the vectorized numpy driver
@@ -240,6 +305,22 @@ def run_bench(fast: bool = False) -> dict:
         "jit_10x_numpy_at_max_batch": bool(
             gate_rows and gate_rows[-1]
             ["speedup_jit_vs_numpy"] >= 10.0),
+        # scale-aware variant of the 10x-vs-numpy reading: target
+        # proportional to the container's core count (recorded in
+        # host.cpu_count), floored at parity
+        "jit_numpy_scale_aware_target": round(scale_target, 2),
+        "jit_numpy_scale_aware": bool(
+            gate_rows and gate_rows[-1]
+            ["speedup_jit_vs_numpy"] >= scale_target),
+        # a killed, journaled sweep must resume bit-identical with
+        # zero re-dispatch of journaled machine groups
+        "resume_bit_identical": (
+            report["resume"]["resume_bit_identical"]
+            and report["resume"]["aborted_mid_sweep"]),
+        "resume_zero_redispatch": (
+            report["resume"]["journal_hits"] >= 1
+            and report["resume"]["group_dispatches_on_resume"]
+            + report["resume"]["journal_hits"] == 2),
         # an ECM sweep over a warm grid must stay on the planner fast
         # path: zero additional simulations or compiled dispatches
         "ecm_zero_extra_dispatches": (
@@ -284,12 +365,22 @@ def main() -> None:
           f"{sw['program_hit_rate']}, ecm {sw['ecm_cells']} "
           f"cells at {sw['ecm_cells_per_s']} cells/s "
           f"(+{sw['ecm_extra_sim_runs']} sims)")
+    rs = report["resume"]
+    print(f"resume: {rs['cells']} cells, aborted={rs['aborted_mid_sweep']}, "
+          f"journal_hits={rs['journal_hits']}, "
+          f"dispatches={rs['group_dispatches_on_resume']}, "
+          f"bit_identical={rs['resume_bit_identical']}")
     print(f"wrote {args.out}")
     failures = []
     if args.check:
         if not report["gate"]["jit_not_slower_than_numpy_at_64plus"]:
             failures.append("jit backend slower than numpy at "
                             "batch >= 64")
+        if not report["gate"]["jit_numpy_scale_aware"]:
+            failures.append(
+                f"jit speedup over numpy below the scale-aware target "
+                f"{report['gate']['jit_numpy_scale_aware_target']}x "
+                f"for this host (see docs/performance.md)")
         if not report["gate"]["ecm_zero_extra_dispatches"]:
             failures.append("ECM sweep left the planner fast path "
                             "(extra sim runs/dispatches)")
@@ -297,6 +388,13 @@ def main() -> None:
             failures.append("program cache cold: recompute sweep "
                             "after drop_results() reused no compiled "
                             "SimPrograms (hit rate 0.0)")
+        if not report["gate"]["resume_bit_identical"]:
+            failures.append("resumed sweep is not bit-identical to an "
+                            "uninterrupted reference sweep")
+        if not report["gate"]["resume_zero_redispatch"]:
+            failures.append("resume re-dispatched a journaled machine "
+                            "group (journal replay must cost zero "
+                            "dispatches)")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)

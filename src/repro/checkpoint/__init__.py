@@ -1,2 +1,2 @@
-from .store import (CheckpointStore, latest_step, load_checkpoint,
-                    save_checkpoint)
+from .store import (CheckpointStore, RecordJournal, latest_step,
+                    load_checkpoint, save_checkpoint)

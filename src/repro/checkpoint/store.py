@@ -32,6 +32,66 @@ import ml_dtypes
 import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
+_REC_RE = re.compile(r"^rec_(\d+)\.json$")
+
+
+class RecordJournal:
+    """Append-only, crash-safe JSON record log.
+
+    One file per record (``rec_00000001.json``), written with the same
+    tmp + rename discipline as the checkpoint store: a writer killed
+    mid-append never leaves a partial record visible, and readers only
+    ever see complete records.  Used by ``AnalysisService.sweep`` to
+    journal completed machine-group results so a killed sweep resumes
+    with zero re-dispatch (docs/robustness.md)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _ids(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _REC_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def append(self, record: dict) -> int:
+        """Atomically append one JSON record; returns its id."""
+        with self._lock:
+            ids = self._ids()
+            rec_id = (ids[-1] + 1) if ids else 1
+            final = os.path.join(self.root, f"rec_{rec_id:08d}.json")
+            tmp = final + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(record, f)
+            os.replace(tmp, final)
+            return rec_id
+
+    def records(self) -> list[dict]:
+        """All complete records in append order.
+
+        Stray ``.tmp`` files (a killed writer) and unparseable files
+        are skipped — crash debris must never poison a resume."""
+        out = []
+        for rec_id in self._ids():
+            path = os.path.join(self.root, f"rec_{rec_id:08d}.json")
+            try:
+                with open(path) as f:
+                    out.append(json.load(f))
+            except (OSError, ValueError):
+                continue
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            for rec_id in self._ids():
+                try:
+                    os.remove(os.path.join(self.root, f"rec_{rec_id:08d}.json"))
+                except OSError:
+                    pass
 
 # numpy cannot round-trip ml_dtypes through .npy files (loads as void);
 # store them through a same-width uint view and record the real dtype in

@@ -7,7 +7,11 @@ from .analysis import AnalysisResult, analyze
 from .arch.registry import (ArchRegistry, UnknownArchError,
                             default_registry, get_model)
 from .database import E, InstrForm, InstructionDB, widen_double_pumped
+from .degrade import (LADDER, BreakerBoard, BreakerConfig, CircuitBreaker,
+                      validate_sims)
 from .engine import AnalysisRequest, AnalysisService, default_service
+from .faults import (FaultAbort, FaultInjector, FaultPlan, FaultSpec,
+                     InjectedFault, ResultValidationError)
 from .isa import Instruction, parse_assembly
 from .kernel import extract_kernel
 from .latency import LatencyResult, analyze_latency, dependency_edges
@@ -23,8 +27,11 @@ __all__ = [
     "AccessStream", "AnalysisRequest", "AnalysisResult",
     "AnalysisService", "analyze", "analyze_latency", "ArchRegistry",
     "as_database", "BenchRecord", "CacheLevel", "compose_ecm",
+    "BreakerBoard", "BreakerConfig", "CircuitBreaker",
     "default_registry", "default_service", "dependency_edges",
-    "EcmResult", "extract_kernel", "extract_streams", "get_model",
+    "EcmResult", "extract_kernel", "extract_streams", "FaultAbort",
+    "FaultInjector", "FaultPlan", "FaultSpec", "get_model",
+    "InjectedFault", "LADDER", "ResultValidationError", "validate_sims",
     "parse_assembly", "Instruction", "InstructionDB", "InstrForm", "E",
     "LatencyResult", "MachineModel", "MemoryHierarchy",
     "PipelineParams", "PortModel", "predict_traffic", "SimProgram",

@@ -71,6 +71,11 @@ class AnalysisResult:
     bound_ecm: float = 0.0                # max(in-core, T_nOL + transfers);
     #                                       0 = not composed
     ecm_result: object | None = None      # repro.core.mem.EcmResult
+    # --- degradation provenance (docs/robustness.md) --------------------
+    degraded: bool = False                # a cheaper backend answered after
+    #                                       the requested one failed
+    backend_used: str = ""                # fallback rung ("" = as requested)
+    fault_trace_id: int = 0               # FaultInjector event id (0 = none)
 
     @property
     def cycles_per_source_iteration(self) -> float:

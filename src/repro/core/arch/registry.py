@@ -72,6 +72,23 @@ class ArchRegistry:
         self._models: dict[str, MachineModel] = {}
         self._aliases: dict[str, str] = {}
         self._dbs: dict[str, InstructionDB] = {}
+        self._epoch = 0
+
+    @property
+    def epoch(self) -> int:
+        """Monotone counter bumped whenever a registration *replaces* a
+        known name (or :meth:`invalidate` drops caches).  Layered: a
+        child's epoch includes its parents', so an
+        :class:`~repro.core.engine.AnalysisService` watching its private
+        child also sees process-wide re-registrations.  Cache holders
+        compare epochs to drop entries for superseded models — the
+        guarantee that a re-registered model is never served stale
+        predictions (docs/robustness.md)."""
+        with self._lock:
+            ep = self._epoch
+        if self._parent is not None:
+            ep += self._parent.epoch
+        return ep
 
     # ------------------------------------------------------------------
     # registration
@@ -108,6 +125,11 @@ class ArchRegistry:
                     raise ValueError(
                         f"architecture name(s) {clash} already "
                         f"registered (pass replace=True to shadow)")
+            elif any(self._known(n, ignore_id=None)
+                     for n in (arch_id, *aliases)):
+                # a *replacing* registration supersedes a model some
+                # cache may already hold results for — bump the epoch
+                self._epoch += 1
             # drop aliases previously pointing at this id, then re-add
             for a in [a for a, c in self._aliases.items() if c == arch_id]:
                 del self._aliases[a]
@@ -283,6 +305,7 @@ class ArchRegistry:
         """Drop cached models/databases (all, or one id) so the next
         access rebuilds; registrations are kept."""
         with self._lock:
+            self._epoch += 1
             if name is None:
                 self._models.clear()
                 self._dbs.clear()

@@ -1,0 +1,215 @@
+"""Backend degradation ladder: circuit breakers + result validation.
+
+The analytic bound (the source paper) and the cycle-level simulator are
+redundant predictors of the same quantity, which is exactly the
+structure graceful degradation needs: when an expensive backend fails,
+a cheaper one still answers, and the analytic bound is the floor that
+never goes away.  The rung sequence is
+
+    pallas -> jit -> numpy -> analytic-only
+
+(`tick` — the per-program reference interpreter used for small batches
+— is its own single-rung ladder above the analytic floor).
+
+Per-(machine digest x backend) :class:`CircuitBreaker` state machines
+stop the engine from hammering a rung that keeps failing:
+
+    closed ──failures >= threshold──> open ──cooldown──> half_open
+      ^                                                      │
+      └──────────── probe succeeds ──────────────────────────┤
+                                                             │
+                    probe fails ──> open (cooldown restarts) ─┘
+
+All clocks are injectable so the chaos suite can step time without
+sleeping.  The :class:`BreakerBoard` keeps a bounded transition log —
+the telemetry that makes breaker opening/half-opening visible in
+``service.export_stats()``.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+__all__ = [
+    "LADDER", "ladder_from", "BreakerConfig", "CircuitBreaker",
+    "BreakerBoard", "validate_sims",
+]
+
+# sim rungs, most to least expensive; "analytic" is the implicit floor
+LADDER: tuple[str, ...] = ("pallas", "jit", "numpy")
+
+
+def ladder_from(backend: str) -> tuple[str, ...]:
+    """The sim rungs at or below ``backend``.
+
+    ``tick`` (the small-batch reference interpreter) has no cheaper sim
+    rung — its only fallback is the analytic floor."""
+    if backend == "tick":
+        return ("tick",)
+    try:
+        i = LADDER.index(backend)
+    except ValueError:
+        raise ValueError(f"unknown sim backend {backend!r}; "
+                         f"known: {', '.join(LADDER)} or 'tick'") from None
+    return LADDER[i:]
+
+
+@dataclass(frozen=True)
+class BreakerConfig:
+    """``failure_threshold`` consecutive failures open the breaker;
+    after ``cooldown_s`` one half-open probe is allowed through."""
+
+    failure_threshold: int = 3
+    cooldown_s: float = 30.0
+
+    def __post_init__(self):
+        if self.failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        if self.cooldown_s < 0:
+            raise ValueError("cooldown_s must be >= 0")
+
+
+class CircuitBreaker:
+    """closed / open / half_open with cooldown; injectable clock."""
+
+    def __init__(self, config: BreakerConfig,
+                 clock: Callable[[], float] = time.monotonic,
+                 on_transition: Callable[[str, str, float], None] | None = None):
+        self.config = config
+        self._clock = clock
+        self._on_transition = on_transition
+        self._state = "closed"
+        self._failures = 0
+        self._opened_at = 0.0
+
+    @property
+    def state(self) -> str:
+        return self._state
+
+    @property
+    def failures(self) -> int:
+        return self._failures
+
+    def _set(self, state: str) -> None:
+        if state == self._state:
+            return
+        prev, self._state = self._state, state
+        if self._on_transition is not None:
+            self._on_transition(prev, state, self._clock())
+
+    def allow(self) -> bool:
+        """May a dispatch be attempted on this rung right now?
+
+        An open breaker whose cooldown has elapsed transitions to
+        half_open and lets exactly one probe through."""
+        if self._state == "closed":
+            return True
+        if self._state == "open":
+            if self._clock() - self._opened_at >= self.config.cooldown_s:
+                self._set("half_open")
+                return True
+            return False
+        # half_open: a probe is already in flight (or just allowed);
+        # further calls wait for its verdict
+        return False
+
+    def record_success(self) -> None:
+        self._failures = 0
+        self._set("closed")
+
+    def record_failure(self) -> None:
+        self._failures += 1
+        if self._state == "half_open" or self._failures >= self.config.failure_threshold:
+            self._opened_at = self._clock()
+            self._set("open")
+
+    def snapshot(self) -> dict:
+        return {"state": self._state, "failures": self._failures,
+                "opened_at": self._opened_at}
+
+
+class BreakerBoard:
+    """Lazily-created breakers keyed (machine digest, backend), plus a
+    bounded transition-event log.  Thread-safe."""
+
+    def __init__(self, config: BreakerConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 event_capacity: int = 256):
+        self.config = config or BreakerConfig()
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._breakers: dict[tuple[str, str], CircuitBreaker] = {}
+        self._events: deque[dict] = deque(maxlen=event_capacity)
+
+    def breaker(self, machine_digest: str, backend: str) -> CircuitBreaker:
+        key = (machine_digest, backend)
+        with self._lock:
+            br = self._breakers.get(key)
+            if br is None:
+                label = f"{machine_digest[:12]}/{backend}"
+
+                def log(prev: str, new: str, t: float, _label=label) -> None:
+                    self._events.append(
+                        {"breaker": _label, "from": prev, "to": new, "t": t})
+
+                br = CircuitBreaker(self.config, clock=self._clock,
+                                    on_transition=log)
+                self._breakers[key] = br
+            return br
+
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "breakers": {f"{d[:12]}/{b}": br.snapshot()
+                             for (d, b), br in sorted(self._breakers.items())},
+                "events": list(self._events),
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._breakers.clear()
+            self._events.clear()
+
+
+# ----------------------------------------------------------------------
+# post-dispatch result validation
+# ----------------------------------------------------------------------
+def validate_sims(sims: Sequence, progs: Sequence,
+                  divergence_factor: float = 50.0) -> list[str]:
+    """Problems with a backend's output, empty when clean.
+
+    Rejects non-finite or negative cycle counts outright, and flags
+    implausible divergence from each program's analytic port bound —
+    the sim models *more* constraints than port pressure (front end,
+    dependencies), so it can exceed the bound, but not by 50x; and it
+    cannot undercut a positive bound by 50x either.  Corrupt output is
+    thereby treated exactly like a dispatch fault."""
+    problems: list[str] = []
+    for sim, prog in zip(sims, progs):
+        cpi = sim.cycles_per_iteration
+        if not math.isfinite(cpi):
+            problems.append(f"{prog.kernel_id}: non-finite cycles ({cpi})")
+            continue
+        if cpi < 0:
+            problems.append(f"{prog.kernel_id}: negative cycles ({cpi})")
+            continue
+        bound = prog.port_bound_cycles
+        if bound > 0:
+            if cpi > bound * divergence_factor:
+                problems.append(
+                    f"{prog.kernel_id}: {cpi:.3f} cy/it diverges above "
+                    f"{divergence_factor:.0f}x the {bound:.3f} port bound")
+            elif cpi * divergence_factor < bound:
+                problems.append(
+                    f"{prog.kernel_id}: {cpi:.3f} cy/it diverges below "
+                    f"1/{divergence_factor:.0f}x the {bound:.3f} port bound")
+    return problems

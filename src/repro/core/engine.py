@@ -47,6 +47,10 @@ from typing import Callable, Iterable, Mapping, Sequence
 from .analysis import AnalysisResult, analyze
 from .arch.registry import ArchRegistry, UnknownArchError, default_registry
 from .database import InstructionDB
+from .degrade import (BreakerBoard, BreakerConfig, ladder_from,
+                      validate_sims)
+from .faults import (FaultAbort, FaultInjector, FaultPlan, InjectedFault,
+                     ResultValidationError)
 from .isa import Instruction
 from .kernel import extract_kernel
 from .machine import MachineModel
@@ -129,6 +133,10 @@ class ServiceStats:
     #                                 machine-model group)
     traffic_hits: int = 0    # memoized ECM traffic predictions
     traffic_misses: int = 0
+    degraded_results: int = 0   # results answered below the requested
+    #                             backend (docs/robustness.md)
+    journal_hits: int = 0    # machine groups replayed from a sweep
+    #                          journal (zero re-dispatch on resume)
 
     def as_dict(self) -> dict[str, int]:
         return dict(vars(self))
@@ -155,7 +163,9 @@ class AnalysisService:
 
     def __init__(self, max_workers: int = 8,
                  registry: ArchRegistry | None = None,
-                 sim_backend: str = "auto"):
+                 sim_backend: str = "auto",
+                 faults: "FaultPlan | FaultInjector | None" = None,
+                 breaker_config: BreakerConfig | None = None):
         self._lock = threading.RLock()
         # a private child of the (shared) registry: this service's
         # register() calls shadow the parent without leaking into other
@@ -176,6 +186,25 @@ class AnalysisService:
         #: | "pallas" (see repro.core.sim.batch and docs/performance.md)
         self.sim_backend = sim_backend
         self.stats = ServiceStats()
+        #: armed fault injector (None = disarmed: every hook is a single
+        #: `is not None` test, so the no-plan instruction stream — and
+        #: therefore the golden tables — is bit-identical to before the
+        #: fault layer existed; docs/robustness.md)
+        self.faults: FaultInjector | None = None
+        if isinstance(faults, FaultPlan):
+            self.faults = FaultInjector(faults)
+        elif faults is not None:
+            self.faults = faults
+        #: per-(machine digest x backend) circuit breakers driving the
+        #: degradation ladder pallas -> jit -> numpy -> analytic-only
+        self.breakers = BreakerBoard(breaker_config)
+        # provenance for sims produced below the requested rung:
+        # sim_key -> (backend_used, degraded, fault event id)
+        self._sim_provenance: dict[tuple, tuple[str, bool, int]] = {}
+        # registry epoch at the last cache fill: a replacing
+        # registration anywhere in the layer chain bumps it, and
+        # _check_epoch() then drops every arch-keyed cache
+        self._arch_epoch = self._arch.epoch
 
     # ------------------------------------------------------------------
     # architectures
@@ -238,9 +267,33 @@ class AnalysisService:
                 del self._results[k]
             for k in [k for k in self._sim_cache if k[0] == key]:
                 del self._sim_cache[k]
+            for k in [k for k in self._sim_provenance if k[0] == key]:
+                del self._sim_provenance[k]
             # edge/program/classify caches are keyed by machine *digest*
             # (content addresses), so entries for a replaced model can
             # never be served for the new one — no invalidation needed
+
+    def _check_epoch(self) -> None:
+        """Drop arch-keyed caches if any registry layer re-registered a
+        model since the last fill.
+
+        Runs at every public prediction entry; the common case is one
+        integer compare.  Digest-keyed caches (edges, programs, traffic)
+        survive — a superseded model's digest can never be resolved
+        again, so those entries are unreachable rather than stale."""
+        ep = self._arch.epoch
+        if ep == self._arch_epoch:
+            return
+        with self._lock:
+            if ep == self._arch_epoch:
+                return
+            self._arch_epoch = ep
+            self._lookups.clear()
+            self._machine_cache.clear()
+            self._results.clear()
+            self._sim_cache.clear()
+            self._sim_provenance.clear()
+            self._hlo_cache.clear()
 
     def database(self, arch: str) -> InstructionDB:
         """The (registry-cached) instruction DB for ``arch``, built on
@@ -366,6 +419,10 @@ class AnalysisService:
                 self.stats.program_hits += 1
                 return hit
             self.stats.program_misses += 1
+        if self.faults is not None:
+            # armed compile faults hit real compilation work only —
+            # a program-cache hit above never fires
+            self.faults.fire("engine.compile", machine=machine.digest)
         from .sim import compile_program
         edges = self.dependency_edges(request.kernel, request.arch,
                                       request.syntax)
@@ -429,6 +486,7 @@ class AnalysisService:
         simulation; the returned result carries ``bound_sim`` and a
         three-way ``binding``.
         """
+        self._check_epoch()
         key = self._result_key(request)
         with self._lock:
             hit = self._results.get(key)
@@ -495,7 +553,14 @@ class AnalysisService:
                            ) -> AnalysisResult:
         """The ``mode="simulate"`` pipeline: analytic result (served
         from / stored in the shared cache) refined by the cycle-level
-        simulator."""
+        simulator.
+
+        The tick-loop driver is its own single-rung ladder: a failed
+        compile or simulation (injected or real) is contained and the
+        cell degrades to the analytic floor with ``degraded``
+        provenance rather than failing the request — the analytic and
+        simulated predictors are redundant estimates of the same
+        quantity (docs/robustness.md)."""
         import dataclasses
 
         from .sim import simulate
@@ -513,12 +578,176 @@ class AnalysisService:
         with self._lock:
             sim = self._sim_cache.get(sim_key)
         if sim is None:
-            with self._lock:
-                self.stats.sim_runs += 1
-            sim = simulate(self._sim_program(request))
-            with self._lock:
-                self._sim_cache[sim_key] = sim
-        return self._combine_sim(analytic, sim)
+            machine = self.resolve_machine(request.arch)
+            breaker = self.breakers.breaker(machine.digest, "tick")
+            event_id = 0
+            try:
+                prog = self._sim_program(request)
+                if not breaker.allow():
+                    raise ResultValidationError(
+                        "tick-rung breaker open for "
+                        f"{machine.digest[:12]}")
+                if self.faults is not None:
+                    self.faults.fire("engine.dispatch", backend="tick",
+                                     machine=machine.digest)
+                with self._lock:
+                    self.stats.sim_runs += 1
+                sim = simulate(prog)
+                if self.faults is not None:
+                    cpi, ev = self.faults.corrupt(
+                        "engine.dispatch", sim.cycles_per_iteration,
+                        backend="tick", machine=machine.digest)
+                    if ev:
+                        sim = dataclasses.replace(
+                            sim, cycles_per_iteration=cpi)
+                problems = validate_sims([sim], [prog])
+                if problems:
+                    raise ResultValidationError("; ".join(problems))
+                breaker.record_success()
+                with self._lock:
+                    self._sim_cache[sim_key] = sim
+            except FaultAbort:
+                raise               # simulated process kill: never contained
+            except ValueError:
+                raise               # bad request, not a backend fault
+            except Exception as exc:
+                breaker.record_failure()
+                event_id = getattr(exc, "event_id", 0)
+                with self._lock:
+                    self.stats.degraded_results += 1
+                return self._analytic_floor(analytic, event_id)
+        res = self._combine_sim(analytic, sim)
+        with self._lock:
+            prov = self._sim_provenance.get(sim_key)
+        if prov is not None and prov[1]:
+            res = dataclasses.replace(
+                res, degraded=True, backend_used=prov[0],
+                fault_trace_id=prov[2])
+        return res
+
+    @staticmethod
+    def _analytic_floor(analytic: AnalysisResult,
+                        event_id: int) -> AnalysisResult:
+        """The bottom ladder rung: answer a ``mode="simulate"`` request
+        with its (already computed) analytic base, flagged ``degraded``.
+
+        Any ECM composition the base carries is stripped the same way
+        :meth:`_combine_sim` does — ``predict``/``predict_batch``
+        re-apply it afterwards, so the floor result equals the plain
+        analytic prediction bit-for-bit."""
+        import dataclasses
+
+        if analytic.ecm_result is None:
+            return dataclasses.replace(
+                analytic, degraded=True, backend_used="analytic",
+                fault_trace_id=event_id)
+        # same binding rule as analyze(): the pre-ECM label
+        binding = ("latency" if analytic.lcd_cycles
+                   > analytic.port_bound_cycles + 1e-9 else "throughput")
+        return dataclasses.replace(
+            analytic,
+            predicted_cycles=max(analytic.port_bound_cycles,
+                                 analytic.lcd_cycles),
+            binding=binding, bound_ecm=0.0, ecm_result=None,
+            degraded=True, backend_used="analytic",
+            fault_trace_id=event_id)
+
+    def _run_ladder(self, digest: str, progs: list, start: str,
+                    small: bool) -> tuple:
+        """Dispatch one machine group down the degradation ladder.
+
+        Walks the sim rungs from ``start`` (``("tick",)`` for the
+        small-batch reference loop), skipping rungs whose circuit
+        breaker is open, validating every rung's output, and demoting
+        on any contained failure.  Returns ``(sims | None,
+        backend_used, degraded, dispatches, fault event id)`` —
+        ``sims is None`` means every rung failed and the group takes
+        the analytic floor.  :class:`FaultAbort` (a simulated process
+        kill) and ``ValueError`` (a deterministic bad request) are
+        never contained."""
+        import dataclasses
+
+        from .sim import simulate, simulate_many
+
+        rungs = ("tick",) if small else ladder_from(start)
+        demoted = False
+        event_id = 0
+        for rung in rungs:
+            breaker = self.breakers.breaker(digest, rung)
+            if not breaker.allow():
+                demoted = True
+                continue
+            try:
+                if self.faults is not None:
+                    self.faults.fire("engine.dispatch", backend=rung,
+                                     machine=digest)
+                counters = {"dispatches": 0}
+                if rung == "tick":
+                    sims = [simulate(p) for p in progs]
+                else:
+                    sims = simulate_many(progs, backend=rung,
+                                         classify=self._classify_memo,
+                                         counters=counters)
+                if self.faults is not None:
+                    poisoned = []
+                    for sim in sims:
+                        cpi, ev = self.faults.corrupt(
+                            "engine.dispatch", sim.cycles_per_iteration,
+                            backend=rung, machine=digest)
+                        if ev:
+                            event_id = ev
+                            sim = dataclasses.replace(
+                                sim, cycles_per_iteration=cpi)
+                        poisoned.append(sim)
+                    sims = poisoned
+                problems = validate_sims(sims, progs)
+                if problems:
+                    raise ResultValidationError("; ".join(problems))
+                breaker.record_success()
+                return (sims, rung, demoted, counters["dispatches"],
+                        event_id)
+            except FaultAbort:
+                raise
+            except ValueError:
+                raise
+            except Exception as exc:
+                breaker.record_failure()
+                event_id = getattr(exc, "event_id", event_id)
+                demoted = True
+                continue
+        return None, "analytic", True, 0, event_id
+
+    @staticmethod
+    def _journal_lookup(session: dict | None, digest: str,
+                        progs: list) -> tuple | None:
+        """Replay one machine group from a sweep-journal session
+        (``sweep(resume_from=...)``); None when the group is not
+        journaled.  Returns ``(sims | None, backend_used, degraded,
+        event id)`` — the same shape the ladder produces, so a resumed
+        sweep is bit-identical with zero re-dispatch."""
+        if session is None or not session.get("resume"):
+            return None
+        record = session["resume"].get(
+            (digest, tuple(p.digest for p in progs)))
+        if record is None:
+            return None
+        from .journal import sim_from_record
+        from .sim.pipeline import DEFAULT_PARAMS
+        if record["sims"] is None:
+            sims = None
+        else:
+            sims = [sim_from_record(sr, p.model.pipeline or DEFAULT_PARAMS)
+                    for sr, p in zip(record["sims"], progs)]
+        return sims, record["backend_used"], record["degraded"], 0
+
+    @staticmethod
+    def _journal_record(session: dict | None, digest: str, progs: list,
+                        sims, backend_used: str, degraded: bool) -> None:
+        if session is None or session.get("writer") is None:
+            return
+        session["writer"].record_group(
+            session["plan"], digest, [p.digest for p in progs],
+            sims, backend_used, degraded)
 
     @staticmethod
     def _combine_sim(analytic: AnalysisResult, sim) -> AnalysisResult:
@@ -566,6 +795,9 @@ class AnalysisService:
                 self.stats.traffic_hits += 1
                 return hit
             self.stats.traffic_misses += 1
+        if self.faults is not None:
+            self.faults.fire("engine.traffic", machine=machine.digest,
+                             traffic_model=request.traffic_model)
         from .mem import (extract_streams, memory_port_occupation,
                           predict_traffic, simulate_traffic)
         kernel = self._kernel_of(request)
@@ -600,7 +832,20 @@ class AnalysisService:
 
         from .mem import compose_ecm
 
-        traffic, t_nol = self._traffic(request, machine)
+        try:
+            traffic, t_nol = self._traffic(request, machine)
+        except FaultAbort:
+            raise
+        except InjectedFault as exc:
+            # contained: the in-core bound stands, flagged degraded —
+            # the memory-hierarchy terms are a refinement, not a
+            # prerequisite (docs/robustness.md)
+            with self._lock:
+                self.stats.degraded_results += 1
+            return dataclasses.replace(
+                res, degraded=True,
+                backend_used=res.backend_used or "incore",
+                fault_trace_id=exc.event_id)
         # T_nOL is by definition part of the in-core time: the uniform
         # split of the memory uops alone can exceed the balanced overall
         # bottleneck on asymmetric port sets, so clamp — this also makes
@@ -617,7 +862,8 @@ class AnalysisService:
 
     def predict_batch(self, requests: Sequence[AnalysisRequest],
                       parallel: bool = False,
-                      backend: str | None = None) -> list[AnalysisResult]:
+                      backend: str | None = None,
+                      _journal: dict | None = None) -> list[AnalysisResult]:
         """Predict every request; order of results matches the input.
 
         Batches run through a three-stage planner instead of a
@@ -647,7 +893,14 @@ class AnalysisService:
         tick loop), so whichever computes a cell first fills the cache
         for both (the drivers' agreement on the paper kernels is locked
         by ``tests/test_simulator.py`` / ``tests/test_sweep_engine.py``).
+
+        Each machine group's dispatch walks the degradation ladder
+        (requested rung, then every cheaper one whose circuit breaker
+        admits it, then the analytic floor) — see docs/robustness.md;
+        ``_journal`` is the private sweep-journal session plumbed
+        through :meth:`sweep` for crash-safe resume.
         """
+        self._check_epoch()
         if len(requests) <= 1:
             return [self.predict(r) for r in requests]
 
@@ -700,31 +953,74 @@ class AnalysisService:
             sim_keys = {k: (self._arch.resolve(r.arch),
                             self._kernel_id(r))
                         for k, r in sim_cells.items()}
+            # sim_key -> fault event id for cells the ladder bottomed
+            # out on (compile fault or every sim rung exhausted): they
+            # get the analytic floor in the combine loop below
+            floor_cells: dict[tuple, int] = {}
             with self._lock:
                 missing = {sk: r for k, r in sim_cells.items()
                            if (sk := sim_keys[k]) not in self._sim_cache}
             if missing:
-                from .sim import (AUTO_JIT_MIN_BATCH, simulate,
-                                  simulate_many)
-                progs = [self._sim_program(r) for r in missing.values()]
+                from .sim import AUTO_JIT_MIN_BATCH
+                from .sim.batch import _resolve_backend
                 chosen = backend or self.sim_backend
-                counters = {"dispatches": 0}
-                if chosen == "auto" and len(progs) < AUTO_JIT_MIN_BATCH:
-                    # small batches: the adaptive reference tick loop
-                    # (the same driver predict() uses) beats the
-                    # fixed-iteration vectorized pass by an order of
-                    # magnitude per point
-                    sims = [simulate(p) for p in progs]
-                else:
-                    sims = simulate_many(progs, backend=chosen,
-                                         classify=self._classify_memo,
-                                         counters=counters)
-                with self._lock:
-                    self.stats.sim_runs += len(progs)
-                    self.stats.sim_group_dispatches += \
-                        counters.get("dispatches", 0)
-                    for sk, sim in zip(missing, sims):
-                        self._sim_cache.setdefault(sk, sim)
+                # compile per request, containing injected compile
+                # faults per cell (a cell whose program cannot compile
+                # degrades alone; the rest of its group still simulates)
+                compiled: dict[tuple, tuple[str, object]] = {}
+                for sk, r in missing.items():
+                    machine = self.resolve_machine(r.arch)
+                    try:
+                        compiled[sk] = (machine.digest,
+                                        self._sim_program(r))
+                    except FaultAbort:
+                        raise
+                    except InjectedFault as exc:
+                        floor_cells[sk] = exc.event_id
+                        with self._lock:
+                            self.stats.degraded_results += 1
+                # the small-batch tick-loop decision and the "auto"
+                # rung both resolve on the *total* missing count, as
+                # the single simulate_many call they replace did
+                small = (chosen == "auto"
+                         and len(compiled) < AUTO_JIT_MIN_BATCH)
+                start = chosen if chosen != "auto" else \
+                    _resolve_backend("auto", len(compiled))
+                groups: dict[str, list[tuple]] = {}
+                for sk, (digest, _prog) in compiled.items():
+                    groups.setdefault(digest, []).append(sk)
+                for digest, sks in groups.items():
+                    progs = [compiled[sk][1] for sk in sks]
+                    replay = self._journal_lookup(_journal, digest, progs)
+                    if replay is not None:
+                        sims, backend_used, degraded, event_id = replay
+                        dispatches = 0
+                        with self._lock:
+                            self.stats.journal_hits += 1
+                    else:
+                        sims, backend_used, degraded, dispatches, \
+                            event_id = self._run_ladder(
+                                digest, progs, start, small)
+                        self._journal_record(_journal, digest, progs,
+                                             sims, backend_used, degraded)
+                    with self._lock:
+                        if sims is None:
+                            # every sim rung failed or was breaker-open:
+                            # the whole group takes the analytic floor
+                            self.stats.degraded_results += len(sks)
+                            for sk in sks:
+                                floor_cells.setdefault(sk, event_id)
+                            continue
+                        if replay is None:
+                            self.stats.sim_runs += len(progs)
+                            self.stats.sim_group_dispatches += dispatches
+                        for sk, sim in zip(sks, sims):
+                            self._sim_cache.setdefault(sk, sim)
+                        if degraded:
+                            self.stats.degraded_results += len(sks)
+                            for sk in sks:
+                                self._sim_provenance[sk] = (
+                                    backend_used, True, event_id)
             # combine analytic base + simulation per cell
             import dataclasses
             for k, req in sim_cells.items():
@@ -733,7 +1029,14 @@ class AnalysisService:
                 with self._lock:
                     analytic = self._results.get(base_key)
                     sim = self._sim_cache.get(sim_keys[k])
-                if analytic is None or sim is None:
+                    prov = self._sim_provenance.get(sim_keys[k])
+                if analytic is not None and sim is None \
+                        and sim_keys[k] in floor_cells:
+                    res = self._apply_ecm(
+                        self._analytic_floor(analytic,
+                                             floor_cells[sim_keys[k]]),
+                        req)
+                elif analytic is None or sim is None:
                     # a concurrent register()/cache_clear() dropped the
                     # cell mid-batch: recompute through the (race-free)
                     # single-request path
@@ -741,6 +1044,10 @@ class AnalysisService:
                 else:
                     res = self._apply_ecm(self._combine_sim(analytic, sim),
                                           req)
+                    if prov is not None and prov[1]:
+                        res = dataclasses.replace(
+                            res, degraded=True, backend_used=prov[0],
+                            fault_trace_id=prov[2])
                 with self._lock:
                     self._results.setdefault(k, res)
 
@@ -799,6 +1106,8 @@ class AnalysisService:
               backend: str | None = None,
               working_set: float | None = None,
               traffic_model: str = "analytic",
+              journal: str | None = None,
+              resume_from: str | None = None,
               ) -> dict[tuple[str, str, str], AnalysisResult]:
         """Full grid: ``{(kernel_name, arch, scheduler): AnalysisResult}``.
 
@@ -814,6 +1123,13 @@ class AnalysisService:
         ECM sweep over an already-swept grid adds zero sim dispatches.
         This is the bulk entry point used by
         ``benchmarks/paper_tables.py``-style sweeps.
+
+        ``journal`` names a directory to journal completed
+        machine-group results into (one crash-safe record per group,
+        scoped by a plan digest over the full request grid);
+        ``resume_from`` replays matching records from such a directory
+        so a killed sweep resumes with zero re-dispatch of journaled
+        groups and bit-identical output — see docs/robustness.md.
         """
         unroll_factors = unroll_factors or {}
         names, reqs = [], []
@@ -826,8 +1142,20 @@ class AnalysisService:
                         unroll_factor=unroll_factors.get(name, 1),
                         mode=mode, working_set=working_set,
                         traffic_model=traffic_model))
+        session = None
+        if journal is not None or resume_from is not None:
+            from .journal import SweepJournal, plan_digest
+            plan = plan_digest([self.request_key(r) for r in reqs],
+                               backend or self.sim_backend)
+            session = {
+                "plan": plan,
+                "writer": SweepJournal(journal)
+                          if journal is not None else None,
+                "resume": SweepJournal(resume_from).load(plan)
+                          if resume_from is not None else {},
+            }
         results = self.predict_batch(reqs, parallel=parallel,
-                                     backend=backend)
+                                     backend=backend, _journal=session)
         return dict(zip(names, results))
 
     # ------------------------------------------------------------------
@@ -856,6 +1184,7 @@ class AnalysisService:
         if mode not in ("analytic", "simulate"):
             raise ValueError(f"unknown mode {mode!r} "
                              "(expected 'analytic' or 'simulate')")
+        self._check_epoch()
         machine = self.resolve_machine(machine or "tpu_v5e")
         digest = hashlib.sha256(text.encode()).hexdigest()
         key = (digest, ici_links, flop_dtype, mode, machine.digest,
@@ -866,6 +1195,11 @@ class AnalysisService:
                 self.stats.hlo_hits += 1
                 return hit
             self.stats.hlo_misses += 1
+        if self.faults is not None:
+            # parse faults are *not* contained: there is no cheaper
+            # predictor for an unparsed module, so the typed error
+            # propagates (the service maps it to a DispatchError)
+            self.faults.fire("engine.hlo_parse", module=digest[:12])
         from .hlo.analyzer import analyze_hlo
         res = analyze_hlo(text, ici_links=ici_links, flop_dtype=flop_dtype,
                           simulate=(mode == "simulate"), machine=machine,
@@ -913,6 +1247,7 @@ class AnalysisService:
         with self._lock:
             self._results.clear()
             self._sim_cache.clear()
+            self._sim_provenance.clear()
             self._hlo_cache.clear()
 
     def cache_clear(self) -> None:
@@ -922,6 +1257,7 @@ class AnalysisService:
             self._lp_cache.clear()
             self._results.clear()
             self._sim_cache.clear()
+            self._sim_provenance.clear()
             self._hlo_cache.clear()
             self._edge_cache.clear()
             self._program_cache.clear()

@@ -1,0 +1,373 @@
+"""Deterministic, seeded fault injection for the prediction stack.
+
+The engine and service thread named *failure points* through their hot
+paths (backend dispatch, program compilation, cache get/put, ECM
+traffic estimation, HLO parse).  A :class:`FaultPlan` arms a set of
+those points with :class:`FaultSpec` entries; the :class:`FaultInjector`
+built from the plan decides — deterministically, from the plan's seed
+and per-spec counters — when each armed point fires.
+
+Design constraints that shape the API:
+
+* **Zero cost when disarmed.**  Callers guard every hook with
+  ``if injector is not None`` — an engine without a plan executes the
+  exact same instruction stream as before this module existed, so the
+  golden tables stay bit-identical.
+* **Deterministic.**  ``probability`` draws come from a per-spec
+  ``random.Random`` seeded from ``(plan.seed, spec index)``; counters
+  are lock-protected.  Two injectors built from the same plan make the
+  same decisions in the same call order.
+* **Serializable.**  ``FaultPlan.to_json``/``from_json`` round-trip, so
+  a chaos schedule can be shipped to a worker or pinned in CI, and
+  ``FaultPlan.digest`` content-addresses it.
+* **Observable.**  Every action (raise, delay, corrupt, abort) appends
+  a :class:`FaultEvent` to a bounded trace with a monotonically
+  increasing id; the id is surfaced as ``fault_trace_id`` provenance on
+  degraded results.
+
+Failure points currently armed by the stack (see docs/robustness.md for
+the full matrix):
+
+========================  ====================================================
+point                     fired from
+========================  ====================================================
+``engine.compile``        ``AnalysisService._sim_program`` (per request)
+``engine.dispatch``       per machine-group backend dispatch (context:
+                          ``backend=``, ``machine=`` digest prefix)
+``engine.traffic``        ECM traffic estimation (``AnalysisService._traffic``)
+``engine.hlo_parse``      ``predict_hlo`` module parse
+``cache.get``             ``TTLCache.get`` (fault -> treated as a miss)
+``cache.put``             ``TTLCache.put`` (fault -> entry silently dropped)
+========================  ====================================================
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import random
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+__all__ = [
+    "FAULT_POINTS", "FAULT_MODES", "CORRUPT_KINDS",
+    "InjectedFault", "FaultAbort", "ResultValidationError",
+    "FaultSpec", "FaultPlan", "FaultEvent", "FaultInjector",
+]
+
+# the registry of point names; fire()/corrupt() reject unknown points so
+# a typo in a chaos schedule fails loudly instead of never firing
+FAULT_POINTS: tuple[str, ...] = (
+    "engine.compile",
+    "engine.dispatch",
+    "engine.traffic",
+    "engine.hlo_parse",
+    "cache.get",
+    "cache.put",
+)
+
+FAULT_MODES: tuple[str, ...] = (
+    "fail",        # raise InjectedFault every time (up to `count`)
+    "fail_once",   # raise exactly once
+    "fail_n",      # raise `count` times
+    "latency",     # sleep(delay_s) instead of raising
+    "corrupt",     # poison a float result (NaN / negative)
+    "abort",       # raise FaultAbort — NOT contained by the ladder;
+                   # simulates a process kill for resume testing
+)
+
+CORRUPT_KINDS: tuple[str, ...] = ("nan", "negative")
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by an armed :class:`FaultSpec`.
+
+    Carries the failure ``point`` and the trace ``event_id`` so tests
+    and telemetry can correlate the raise with the injector's event
+    log."""
+
+    def __init__(self, point: str, event_id: int, context: Mapping[str, object]):
+        ctx = " ".join(f"{k}={v}" for k, v in sorted(context.items()))
+        super().__init__(f"injected fault at {point}" + (f" ({ctx})" if ctx else ""))
+        self.point = point
+        self.event_id = event_id
+        self.context = dict(context)
+
+
+class FaultAbort(InjectedFault):
+    """A simulated process kill.
+
+    Unlike :class:`InjectedFault`, the degradation ladder never
+    contains this — it propagates out of ``predict_batch``/``sweep`` so
+    the crash-resume machinery can be exercised end to end."""
+
+
+class ResultValidationError(RuntimeError):
+    """A post-dispatch validator rejected a backend's output (non-finite
+    or negative cycles, or implausible divergence from the analytic
+    port bound).  The ladder treats this exactly like a dispatch
+    fault."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One armed failure point.
+
+    ``match`` restricts firing to calls whose context carries the given
+    key/value pairs (e.g. ``{"backend": "jit"}`` only faults the jit
+    rung).  ``skip`` lets the first N matching calls through untouched
+    — the lever for "kill the *second* machine group".  ``count`` caps
+    total firings (``None`` = unlimited; forced to 1 for
+    ``fail_once``).  ``probability`` < 1 makes firing a seeded coin
+    flip."""
+
+    point: str
+    mode: str = "fail"
+    count: int | None = None
+    skip: int = 0
+    match: Mapping[str, str] = field(default_factory=dict)
+    delay_s: float = 0.05
+    corrupt: str = "nan"
+    probability: float = 1.0
+
+    def __post_init__(self):
+        if self.point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {self.point!r}; "
+                             f"known: {', '.join(FAULT_POINTS)}")
+        if self.mode not in FAULT_MODES:
+            raise ValueError(f"unknown fault mode {self.mode!r}")
+        if self.corrupt not in CORRUPT_KINDS:
+            raise ValueError(f"unknown corrupt kind {self.corrupt!r}")
+        if self.skip < 0:
+            raise ValueError("skip must be >= 0")
+        if self.count is not None and self.count < 1:
+            raise ValueError("count must be >= 1 (or None for unlimited)")
+        if not 0.0 <= self.probability <= 1.0:
+            raise ValueError("probability must be in [0, 1]")
+        if self.delay_s < 0:
+            raise ValueError("delay_s must be >= 0")
+        # freeze the match mapping so specs are safely shareable
+        object.__setattr__(self, "match", dict(self.match))
+
+    @property
+    def limit(self) -> int | None:
+        """Maximum number of firings (None = unlimited)."""
+        if self.mode == "fail_once":
+            return 1
+        return self.count
+
+    def to_dict(self) -> dict:
+        return {"point": self.point, "mode": self.mode, "count": self.count,
+                "skip": self.skip, "match": dict(self.match),
+                "delay_s": self.delay_s, "corrupt": self.corrupt,
+                "probability": self.probability}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "FaultSpec":
+        return cls(point=d["point"], mode=d.get("mode", "fail"),
+                   count=d.get("count"), skip=d.get("skip", 0),
+                   match=d.get("match", {}), delay_s=d.get("delay_s", 0.05),
+                   corrupt=d.get("corrupt", "nan"),
+                   probability=d.get("probability", 1.0))
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A serializable chaos schedule: a tuple of specs plus the seed
+    feeding every per-spec RNG."""
+
+    specs: tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    def to_dict(self) -> dict:
+        return {"seed": self.seed, "specs": [s.to_dict() for s in self.specs]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "FaultPlan":
+        return cls(specs=tuple(FaultSpec.from_dict(s) for s in d.get("specs", ())),
+                   seed=d.get("seed", 0))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        return cls.from_dict(json.loads(text))
+
+    @property
+    def digest(self) -> str:
+        """Content address of the schedule (sha256 of canonical JSON)."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
+
+
+@dataclass
+class FaultEvent:
+    """One entry in the injector's bounded trace."""
+
+    id: int
+    point: str
+    mode: str
+    action: str            # "raised" | "delayed" | "corrupted" | "aborted"
+    spec_index: int
+    context: dict
+
+    def as_dict(self) -> dict:
+        return {"id": self.id, "point": self.point, "mode": self.mode,
+                "action": self.action, "spec": self.spec_index,
+                "context": dict(self.context)}
+
+
+class FaultInjector:
+    """Runtime for a :class:`FaultPlan`.
+
+    ``clock`` and ``sleep`` are injectable so tests can fake latency
+    spikes without wall-clock waits.  Thread-safe: per-spec counters
+    and the event trace are guarded by one lock (the engine dispatches
+    machine groups from worker threads)."""
+
+    def __init__(self, plan: FaultPlan, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 trace_capacity: int = 1024):
+        self.plan = plan
+        self._clock = clock
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        self._seen = [0] * len(plan.specs)
+        self._fired = [0] * len(plan.specs)
+        # int-arithmetic seed: stable across processes (str hashing is not)
+        self._rngs = [random.Random(plan.seed * 1_000_003 + i)
+                      for i in range(len(plan.specs))]
+        self._events: deque[FaultEvent] = deque(maxlen=trace_capacity)
+        self._next_id = 1
+
+    # ------------------------------------------------------------------
+    # decision core
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _matches(spec: FaultSpec, context: Mapping[str, object]) -> bool:
+        return all(str(context.get(k)) == str(v) for k, v in spec.match.items())
+
+    def _decide(self, i: int, spec: FaultSpec) -> bool:
+        """Under the lock: advance this spec's counters and decide
+        whether it fires on this call."""
+        self._seen[i] += 1
+        if self._seen[i] <= spec.skip:
+            return False
+        if spec.limit is not None and self._fired[i] >= spec.limit:
+            return False
+        if spec.probability < 1.0 and self._rngs[i].random() >= spec.probability:
+            return False
+        self._fired[i] += 1
+        return True
+
+    def _record(self, spec_index: int, spec: FaultSpec, action: str,
+                context: Mapping[str, object]) -> int:
+        ev = FaultEvent(id=self._next_id, point=spec.point, mode=spec.mode,
+                        action=action, spec_index=spec_index,
+                        context=dict(context))
+        self._next_id += 1
+        self._events.append(ev)
+        return ev.id
+
+    # ------------------------------------------------------------------
+    # hooks
+    # ------------------------------------------------------------------
+    def fire(self, point: str, **context) -> None:
+        """Raise / delay if a spec armed at ``point`` fires.
+
+        Raises :class:`FaultAbort` for ``abort`` specs and
+        :class:`InjectedFault` for the ``fail*`` family; ``latency``
+        specs sleep and return.  ``corrupt`` specs are ignored here —
+        they act through :meth:`corrupt`."""
+        if point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {point!r}")
+        delays: list[float] = []
+        raise_exc: InjectedFault | None = None
+        with self._lock:
+            for i, spec in enumerate(self.plan.specs):
+                if spec.point != point or spec.mode == "corrupt":
+                    continue
+                if not self._matches(spec, context):
+                    continue
+                if not self._decide(i, spec):
+                    continue
+                if spec.mode == "latency":
+                    self._record(i, spec, "delayed", context)
+                    delays.append(spec.delay_s)
+                elif spec.mode == "abort":
+                    ev = self._record(i, spec, "aborted", context)
+                    raise_exc = FaultAbort(point, ev, context)
+                    break
+                else:
+                    ev = self._record(i, spec, "raised", context)
+                    raise_exc = InjectedFault(point, ev, context)
+                    break
+        # sleep outside the lock so latency spikes don't serialize the pool
+        for d in delays:
+            self._sleep(d)
+        if raise_exc is not None:
+            raise raise_exc
+
+    def corrupt(self, point: str, value: float, **context) -> tuple[float, int]:
+        """Pass ``value`` through any armed ``corrupt`` spec.
+
+        Returns ``(possibly poisoned value, event id)``; the event id is
+        0 when no spec fired."""
+        if point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {point!r}")
+        with self._lock:
+            for i, spec in enumerate(self.plan.specs):
+                if spec.point != point or spec.mode != "corrupt":
+                    continue
+                if not self._matches(spec, context):
+                    continue
+                if not self._decide(i, spec):
+                    continue
+                ev = self._record(i, spec, "corrupted", context)
+                if spec.corrupt == "nan":
+                    return float("nan"), ev
+                return -abs(value) - 1.0, ev
+        return value, 0
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def events(self) -> list[FaultEvent]:
+        with self._lock:
+            return list(self._events)
+
+    def export(self) -> dict:
+        """Trace + counters, JSON-ready (the CI chaos artifact)."""
+        with self._lock:
+            return {
+                "plan": self.plan.to_dict(),
+                "plan_digest": self.plan.digest,
+                "fired": list(self._fired),
+                "seen": list(self._seen),
+                "events": [e.as_dict() for e in self._events],
+            }
+
+    def summary(self) -> dict:
+        """Compact per-point firing counts for telemetry exports."""
+        with self._lock:
+            counts: dict[str, int] = {}
+            for spec, fired in zip(self.plan.specs, self._fired):
+                if fired:
+                    counts[spec.point] = counts.get(spec.point, 0) + fired
+            return {"events": len(self._events), "fired_by_point": counts}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._seen = [0] * len(self.plan.specs)
+            self._fired = [0] * len(self.plan.specs)
+            self._rngs = [random.Random(self.plan.seed * 1_000_003 + i)
+                          for i in range(len(self.plan.specs))]
+            self._events.clear()
+            self._next_id = 1

@@ -1,0 +1,105 @@
+"""Crash-safe resumable sweeps: the machine-group result journal.
+
+``AnalysisService.sweep(journal=dir)`` appends one record per
+*completed* machine-group dispatch through the checkpoint store's
+:class:`~repro.checkpoint.store.RecordJournal` (tmp + rename per
+record, so a killed sweep never leaves a torn record).  A later
+``sweep(resume_from=dir)`` replays matching records straight into the
+sim cache — zero re-dispatch of journaled groups — and, because JSON
+floats round-trip exactly (shortest-repr), the resumed grid is
+bit-identical to an uninterrupted run.
+
+Records are scoped by a *plan digest*: sha256 over the ordered
+request keys plus the backend choice.  A journal written for one sweep
+is inert for any other — changing the kernel set, the arch grid, the
+mode, or the backend changes the digest and no stale group can leak in.
+
+``SimResult.params`` is deliberately not serialized: it is derived
+state (``prog.model.pipeline or DEFAULT_PARAMS``), reconstructed on
+load from the same machine model the resumed sweep resolves.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Mapping, Sequence
+
+from .sim.pipeline import DEFAULT_PARAMS, SimResult
+
+__all__ = ["SweepJournal", "plan_digest", "sim_to_record", "sim_from_record"]
+
+
+def plan_digest(request_keys: Sequence[tuple], backend: str) -> str:
+    """Content address of a sweep plan: the ordered request keys (each
+    already carries the resolved machine digest, kernel id, mode,
+    working set, ...) plus the backend choice."""
+    canon = repr((tuple(request_keys), backend))
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+def sim_to_record(sim: SimResult) -> dict:
+    return {
+        "cpi": sim.cycles_per_iteration,
+        "iterations": sim.iterations,
+        "converged": sim.converged,
+        "bottleneck": sim.bottleneck,
+        "frontend_cycles": sim.frontend_cycles,
+        "port_busy": dict(sim.port_busy),
+        "delivery_cycles": sim.delivery_cycles,
+        "fe_mode": sim.fe_mode,
+    }
+
+
+def sim_from_record(rec: Mapping, params) -> SimResult:
+    return SimResult(
+        cycles_per_iteration=rec["cpi"],
+        iterations=rec["iterations"],
+        converged=rec["converged"],
+        bottleneck=rec["bottleneck"],
+        frontend_cycles=rec["frontend_cycles"],
+        port_busy=dict(rec["port_busy"]),
+        params=params if params is not None else DEFAULT_PARAMS,
+        delivery_cycles=rec["delivery_cycles"],
+        fe_mode=rec["fe_mode"],
+    )
+
+
+class SweepJournal:
+    """Reader/writer for one journal directory.
+
+    A group record is keyed ``(machine digest, ordered program
+    digests)`` under a plan digest; ``sims`` is ``None`` for a group
+    that degraded all the way to the analytic floor (replaying that is
+    what keeps resume bit-identical even under faults)."""
+
+    def __init__(self, root: str):
+        # local import: repro.checkpoint pulls in jax at module scope
+        from ..checkpoint.store import RecordJournal
+        self._journal = RecordJournal(root)
+
+    # -- writer -------------------------------------------------------
+    def record_group(self, plan: str, machine_digest: str,
+                     prog_digests: Sequence[str],
+                     sims: Sequence[SimResult] | None,
+                     backend_used: str, degraded: bool) -> None:
+        self._journal.append({
+            "plan": plan,
+            "machine": machine_digest,
+            "programs": list(prog_digests),
+            "backend_used": backend_used,
+            "degraded": degraded,
+            "sims": None if sims is None else [sim_to_record(s) for s in sims],
+        })
+
+    # -- reader -------------------------------------------------------
+    def load(self, plan: str) -> dict[tuple[str, tuple[str, ...]], dict]:
+        """Completed group records for ``plan``, keyed
+        ``(machine digest, program digests)``; later records win (a
+        resumed run may have re-journaled a group)."""
+        out: dict[tuple[str, tuple[str, ...]], dict] = {}
+        for rec in self._journal.records():
+            if rec.get("plan") != plan:
+                continue
+            key = (rec["machine"], tuple(rec["programs"]))
+            out[key] = rec
+        return out

@@ -14,35 +14,57 @@ Keys are the same content digests the engine memoizes on (machine
 digest x kernel id x request knobs), so two tenants asking the same
 question share one entry.  Like the admission controller, the cache
 takes ``now`` from the caller — deterministic under test.
+
+A cache is a redundancy, never a dependency: when a
+:class:`~repro.core.faults.FaultInjector` is armed on it, an injected
+``cache.get`` fault is served as a miss and an injected ``cache.put``
+fault silently drops the store — the service keeps answering either
+way (docs/robustness.md).
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Hashable
+from typing import Any, Callable, Hashable
+
+from repro.core.faults import FaultAbort, FaultInjector, InjectedFault
 
 
 class TTLCache:
     """LRU-of-bounded-size with per-entry TTL; O(1) get/put."""
 
     def __init__(self, max_entries: int = 4096,
-                 ttl_s: float = float("inf")):
+                 ttl_s: float = float("inf"),
+                 faults: FaultInjector | None = None):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
         self.ttl_s = ttl_s
+        self.faults = faults
         self._data: OrderedDict[Hashable, tuple[float, Any]] = \
             OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.expirations = 0
+        self.fault_misses = 0
+        self.fault_drops = 0
 
     def __len__(self) -> int:
         return len(self._data)
 
     def get(self, key: Hashable, now: float = 0.0):
         """The cached value or ``None`` (expired entries count as
-        misses and are dropped)."""
+        misses and are dropped; an injected fault is contained as a
+        miss)."""
+        if self.faults is not None:
+            try:
+                self.faults.fire("cache.get")
+            except FaultAbort:
+                raise
+            except InjectedFault:
+                self.fault_misses += 1
+                self.misses += 1
+                return None
         entry = self._data.get(key)
         if entry is None:
             self.misses += 1
@@ -58,6 +80,14 @@ class TTLCache:
         return value
 
     def put(self, key: Hashable, value: Any, now: float = 0.0) -> None:
+        if self.faults is not None:
+            try:
+                self.faults.fire("cache.put")
+            except FaultAbort:
+                raise
+            except InjectedFault:
+                self.fault_drops += 1
+                return
         if key in self._data:
             self._data.move_to_end(key)
         self._data[key] = (now, value)
@@ -74,6 +104,15 @@ class TTLCache:
         self.expirations += len(dead)
         return len(dead)
 
+    def invalidate(self, match: Callable[[Hashable], bool]) -> int:
+        """Drop every entry whose key satisfies ``match``; returns the
+        count dropped (the targeted form of :meth:`clear`, e.g. keys
+        carrying a superseded machine digest)."""
+        dead = [k for k in self._data if match(k)]
+        for k in dead:
+            del self._data[k]
+        return len(dead)
+
     def clear(self) -> None:
         self._data.clear()
 
@@ -85,4 +124,6 @@ class TTLCache:
         return {"entries": len(self._data), "hits": self.hits,
                 "misses": self.misses, "hit_rate": self.hit_rate(),
                 "evictions": self.evictions,
-                "expirations": self.expirations}
+                "expirations": self.expirations,
+                "fault_misses": self.fault_misses,
+                "fault_drops": self.fault_drops}

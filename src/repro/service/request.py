@@ -81,7 +81,23 @@ class ServiceResponse:
     dispatch_s: float = 0.0          # engine batch dispatch (shared)
     total_s: float = 0.0             # submit -> response
     cohort_size: int = 0             # batch the request dispatched in
+    # degradation provenance, copied from the engine result — a
+    # degraded answer is never silently indistinguishable from a
+    # full-fidelity one (docs/robustness.md)
+    degraded: bool = False
+    backend_used: str = ""           # fallback rung ("" = as requested)
+    fault_trace_id: int = 0          # FaultInjector event id (0 = none)
 
     @property
     def ok(self) -> bool:
         return self.error is None
+
+    @classmethod
+    def provenance_of(cls, result: Any) -> dict[str, Any]:
+        """The degradation fields carried by an engine result (empty
+        defaults for result types without them, e.g. HloAnalysis)."""
+        return {
+            "degraded": bool(getattr(result, "degraded", False)),
+            "backend_used": str(getattr(result, "backend_used", "")),
+            "fault_trace_id": int(getattr(result, "fault_trace_id", 0)),
+        }

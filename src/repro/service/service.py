@@ -100,12 +100,19 @@ class PredictionService:
             max_queue_depth=self.config.max_queue_depth,
             default_policy=self.config.default_policy,
             per_tenant=self.config.tenant_policies)
+        # the engine's fault injector (when armed) also covers the
+        # cross-request cache, so one FaultPlan exercises the whole stack
         self.cache = TTLCache(max_entries=self.config.cache_entries,
-                              ttl_s=self.config.cache_ttl_s)
+                              ttl_s=self.config.cache_ttl_s,
+                              faults=self.engine.faults)
         self.telemetry = Telemetry()
         self._queue: asyncio.Queue | None = None
         self._dispatcher: asyncio.Task | None = None
         self._closed = True
+        # registry epoch at the last cache fill: a machine-model
+        # re-registration invalidates every cross-request entry (they
+        # key on digests of models that may no longer be resolvable)
+        self._registry_epoch = self.engine.registry.epoch
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -174,6 +181,11 @@ class PredictionService:
         tc.submitted += 1
         if self._closed or self._queue is None:
             raise ServiceClosed("service not started or stopped")
+        epoch = self.engine.registry.epoch
+        if epoch != self._registry_epoch:
+            self._registry_epoch = epoch
+            self.cache.clear()
+            self.telemetry.trace("cache_invalidated", epoch=epoch)
         key = self._cache_key(sreq)
         hit = self.cache.get(key, now)
         if hit is not None:
@@ -182,7 +194,8 @@ class PredictionService:
             dt = loop.time() - now
             self.telemetry.total.observe(dt)
             return ServiceResponse(request=sreq, result=hit,
-                                   cache_hit=True, total_s=dt)
+                                   cache_hit=True, total_s=dt,
+                                   **ServiceResponse.provenance_of(hit))
         try:
             self.admission.admit(sreq.tenant, now)
         except AdmissionError:
@@ -357,7 +370,8 @@ class PredictionService:
                 p.future.set_result(ServiceResponse(
                     request=p.request, result=result,
                     queue_s=queue_s, dispatch_s=dt, total_s=total_s,
-                    cohort_size=len(live)))
+                    cohort_size=len(live),
+                    **ServiceResponse.provenance_of(result)))
 
     # ------------------------------------------------------------------
     # introspection
@@ -372,6 +386,11 @@ class PredictionService:
             k: self.engine.stats.hit_rate(k)
             for k in ("result", "lookup", "lp", "hlo", "edge",
                       "program", "classify", "machine")}
+        # degradation-ladder state: breaker opening/half-opening is
+        # visible here (and in the bounded transition event log)
+        out["breakers"] = self.engine.breakers.snapshot()
+        out["faults"] = (self.engine.faults.summary()
+                         if self.engine.faults is not None else None)
         return out
 
     def slo_model(self) -> SloModel:

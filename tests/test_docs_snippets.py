@@ -9,7 +9,7 @@ import pytest
 ROOT = Path(__file__).resolve().parent.parent
 DOC_PAGES = ["docs/api.md", "docs/simulation.md", "docs/performance.md",
              "docs/frontend.md", "docs/ecm.md",
-             "docs/serving-service.md"]
+             "docs/serving-service.md", "docs/robustness.md"]
 
 
 def _python_blocks(page: str) -> list[tuple[str, str]]:

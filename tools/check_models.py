@@ -17,7 +17,9 @@ Run:  PYTHONPATH=src python tools/check_models.py
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import math
 import sys
 from pathlib import Path
 
@@ -26,6 +28,64 @@ sys.path.insert(0, str(ROOT / "src"))
 
 from repro.core.arch.registry import MODELS_DIR, default_registry  # noqa: E402
 from repro.core.machine import SCHEMA, MachineModel  # noqa: E402
+
+
+def _bad_number(value) -> bool:
+    """NaN, infinity, or negative — none of which any latency, port
+    pressure, bandwidth or size constant may carry.  A corrupt artifact
+    must fail here, in lint, not deep inside a solve where the NaN has
+    already propagated through a max()."""
+    if value is None:
+        return False
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        return True
+    return not math.isfinite(v) or v < 0
+
+
+def check_numbers(model: MachineModel, origin: str,
+                  errors: list[str]) -> None:
+    """Reject NaN/negative latencies, port pressures and hierarchy
+    constants (the `<= 0` style checks elsewhere let NaN through —
+    every NaN comparison is False)."""
+    for f in model.forms:
+        if _bad_number(f.throughput):
+            errors.append(f"{origin}: form {f.mnemonic!r} {f.signature} "
+                          f"has NaN/negative throughput {f.throughput!r}")
+        if _bad_number(f.latency):
+            errors.append(f"{origin}: form {f.mnemonic!r} {f.signature} "
+                          f"has NaN/negative latency {f.latency!r}")
+        for u in f.uops:
+            if _bad_number(u.cycles):
+                errors.append(
+                    f"{origin}: form {f.mnemonic!r} {f.signature} has "
+                    f"NaN/negative port pressure {u.cycles!r} on "
+                    f"{u.ports}")
+    if _bad_number(model.frequency_hz):
+        errors.append(f"{origin}: NaN/negative frequency_hz "
+                      f"{model.frequency_hz!r}")
+    if _bad_number(model.store_forward_latency):
+        errors.append(f"{origin}: NaN/negative store_forward_latency "
+                      f"{model.store_forward_latency!r}")
+    pl = model.pipeline
+    if pl is not None:
+        for fld in dataclasses.fields(pl):
+            v = getattr(pl, fld.name)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and _bad_number(v):
+                errors.append(f"{origin}: pipeline.{fld.name} is "
+                              f"NaN/negative ({v!r})")
+    hz = model.hierarchy
+    if hz is not None:
+        for i, lv in enumerate(hz.levels):
+            for fld in dataclasses.fields(lv):
+                v = getattr(lv, fld.name)
+                if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                        and _bad_number(v):
+                    errors.append(
+                        f"{origin}: hierarchy level {i} ({fld.name}) is "
+                        f"NaN/negative ({v!r})")
 
 
 def check_model(model: MachineModel, origin: str,
@@ -77,6 +137,7 @@ def check_model(model: MachineModel, origin: str,
         # every defect instead of failing construction on the first
         for err in hz.validate():
             errors.append(f"{origin}: hierarchy: {err}")
+    check_numbers(model, origin, errors)
     clone = MachineModel.from_json(model.to_json())
     if clone != model:
         errors.append(f"{origin}: JSON round trip is not the identity")
