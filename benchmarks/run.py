@@ -77,6 +77,20 @@ def main() -> None:
                     **{f"{k}_hit_rate": sw["hit_rates"][k]
                        for k in ("result", "lookup", "lp", "edge",
                                  "program", "classify", "machine")}}))
+        # journal health: replay hits on resume plus the compacted
+        # on-disk footprint of the 10k-cell kill/resume probe
+        # (docs/robustness.md#journal-segments)
+        rs, cpn = sweep_report["resume"], sweep_report["compaction"]
+        print(_csv({"name": "sweep_bench/journal",
+                    "resume_journal_hits": rs["journal_hits"],
+                    "resume_bit_identical": rs["resume_bit_identical"],
+                    "compaction_cells": cpn["cells"],
+                    "compaction_journal_hits": cpn["journal_hits"],
+                    "journal_records": cpn["journal_final"]["records"],
+                    "journal_segments": cpn["journal_final"]["segments"],
+                    "journal_loose_files":
+                        cpn["journal_final"]["loose_files"],
+                    "journal_bytes": cpn["journal_final"]["bytes"]}))
 
     # ---- prediction-service load replay (docs/serving-service.md) ---
     if args.skip_host:

@@ -280,6 +280,119 @@ def chaos_probe() -> dict:
     }
 
 
+def routing_probe() -> dict:
+    """Breaker-aware routing (docs/robustness.md#health-aware-routing):
+    once the pallas rung's breaker is open, the :class:`HealthRouter`
+    must start every later cohort below it — zero dispatch attempts
+    against the open rung, zero drops, and the skip recorded as
+    provenance (``routed_from``) on every affected response.
+
+    The fault plan kills the pallas dispatch before the driver runs,
+    so the probe is jax-independent: round one trips the breaker, and
+    from then on any further pallas attempt is a routing bug, not a
+    scheduled probe (the cooldown is far past the bench horizon)."""
+    from repro.core import (AnalysisService, BreakerConfig, FaultPlan,
+                            FaultSpec, HealthRouter)
+    from repro.core.engine import AnalysisRequest
+    from repro.service import (PredictionService, ServiceConfig,
+                               ServiceRequest, replay)
+
+    primary = "pallas"
+    plan = FaultPlan(specs=(
+        FaultSpec(point="engine.dispatch", mode="fail",
+                  match={"backend": primary}),))
+    engine = AnalysisService(
+        faults=plan, router=HealthRouter(),
+        breaker_config=BreakerConfig(failure_threshold=1,
+                                     cooldown_s=300.0))
+    svc = PredictionService(engine, ServiceConfig(
+        batch_window_s=0.01, backend=primary, cache_ttl_s=0.0))
+
+    cells = _sweep_cells()
+    rounds = 3
+    resolved = 0
+    routed = []
+    attempts_round1 = None
+    for r in range(rounds):
+        burst = [(0.0, ServiceRequest(
+            analysis=AnalysisRequest(kernel=src, arch=arch,
+                                     mode="simulate"),
+            tenant="router", tag=f"round{r}")) for arch, src in cells]
+        resps = replay(svc, burst)
+        resolved += sum(1 for x in resps if x.ok)
+        routed += [x for x in resps if x.ok and x.routed_from]
+        if attempts_round1 is None:
+            attempts_round1 = engine.stats.rung_attempts.get(primary, 0)
+        svc.engine.drop_results()
+
+    attempts_final = engine.stats.rung_attempts.get(primary, 0)
+    return {
+        "primary_backend": primary,
+        "requests": rounds * len(cells),
+        "resolved": resolved,
+        "dropped": rounds * len(cells) - resolved,
+        "primary_attempts_round1": attempts_round1,
+        "primary_attempts_after_trip": attempts_final - attempts_round1,
+        "routed_responses": len(routed),
+        "routed_from_recorded": bool(routed) and all(
+            x.routed_from == primary and x.backend_used != primary
+            for x in routed),
+        "routed_groups": engine.stats.routed_groups,
+        "router_stats": engine.router.snapshot()["stats"],
+    }
+
+
+def retry_probe() -> dict:
+    """Retry governance (docs/robustness.md#retry-budgets): transient
+    dispatch faults must be retried under capped full-jitter backoff
+    and resolve, while a tenant with an exhausted retry budget must
+    fail fast with an explicit reason instead of looping."""
+    from repro.core import AnalysisService, FaultPlan, FaultSpec
+    from repro.service import (PredictionService, ServiceConfig,
+                               ServiceRequest, TenantPolicy, replay)
+    from repro.service.request import HloRequest
+
+    def burst(tenant):
+        # hlo_parse faults propagate as DispatchError (the ladder does
+        # not contain the parse stage), so they drive the retry loop
+        return [(0.0, ServiceRequest(
+            hlo=HloRequest(text=_HLO_MODULES["dot64"]),
+            tenant=tenant))]
+
+    # transient: two parse failures, then clean — governed retries win
+    engine = AnalysisService(faults=FaultPlan(specs=(
+        FaultSpec(point="engine.hlo_parse", mode="fail", count=2),)))
+    svc = PredictionService(engine, ServiceConfig(
+        batch_window_s=0.005, max_retries=3, retry_backoff_s=0.005,
+        retry_backoff_cap_s=0.02))
+    ok_resps = replay(svc, burst("patient"))
+    tele = svc.telemetry
+    recovered = all(r.ok for r in ok_resps)
+    retries = sum(c.retries for c in tele.cohort_classes.values())
+    sleeps = tele.retry_sleep.count
+
+    # exhausted budget: same transient fault, but the tenant has no
+    # retry tokens — the response must fail fast with the reason
+    engine2 = AnalysisService(faults=FaultPlan(specs=(
+        FaultSpec(point="engine.hlo_parse", mode="fail", count=2),)))
+    svc2 = PredictionService(engine2, ServiceConfig(
+        batch_window_s=0.005, max_retries=3, retry_backoff_s=0.005,
+        default_policy=TenantPolicy(retry_rate_per_s=0.0,
+                                    retry_burst=0.0)))
+    broke_resps = replay(svc2, burst("broke"))
+    failed_fast = all((not r.ok) and r.error is not None
+                      and "retry budget" in str(r.error)
+                      for r in broke_resps)
+    exhausted = svc2.telemetry.tenant("broke").retry_budget_exhausted
+    return {
+        "recovered": recovered,
+        "retries": retries,
+        "retry_sleeps_recorded": sleeps,
+        "budget_failed_fast": failed_fast,
+        "budget_exhausted_count": exhausted,
+    }
+
+
 def run_bench(fast: bool = False) -> dict:
     from repro.service import PredictionService, ServiceConfig, replay
 
@@ -370,6 +483,8 @@ def run_bench(fast: bool = False) -> dict:
         "engine_hit_rates": stats["engine_hit_rates"],
         "admission_probe": admission_probe(),
         "chaos_probe": chaos_probe(),
+        "routing_probe": routing_probe(),
+        "retry_probe": retry_probe(),
     }
     return report
 
@@ -414,6 +529,16 @@ def main() -> None:
           f"{cp['degraded_responses']} degraded via "
           f"{', '.join(cp['fallback_backends']) or '-'}; breaker "
           f"transitions: {', '.join(cp['breaker_transitions']) or '-'}")
+    rt = report["routing_probe"]
+    print(f"routing probe [{rt['primary_backend']} tripped]: "
+          f"{rt['resolved']}/{rt['requests']} resolved, "
+          f"{rt['routed_responses']} routed past the open rung "
+          f"({rt['primary_attempts_after_trip']} attempts after trip)")
+    rp = report["retry_probe"]
+    print(f"retry probe: recovered={rp['recovered']} after "
+          f"{rp['retries']} governed retries; budget fail-fast="
+          f"{rp['budget_failed_fast']} "
+          f"({rp['budget_exhausted_count']} exhausted)")
     print(f"wrote {args.out}")
 
     if args.check:
@@ -450,6 +575,25 @@ def main() -> None:
             failures.append(
                 f"breaker open/half-open not visible in telemetry "
                 f"(saw: {cp['breaker_transitions']})")
+        if rt["dropped"]:
+            failures.append(f"routing probe dropped {rt['dropped']} "
+                            "requests with the primary rung open")
+        if rt["primary_attempts_after_trip"]:
+            failures.append(
+                f"router allowed {rt['primary_attempts_after_trip']} "
+                f"dispatch attempts against the open "
+                f"{rt['primary_backend']} rung")
+        if not (rt["routed_responses"] and rt["routed_from_recorded"]):
+            failures.append("routed responses missing routed_from/"
+                            "backend_used provenance")
+        if not (rp["recovered"] and rp["retries"]
+                and rp["retry_sleeps_recorded"]):
+            failures.append("transient faults did not recover through "
+                            "governed retries")
+        if not (rp["budget_failed_fast"]
+                and rp["budget_exhausted_count"]):
+            failures.append("exhausted retry budget did not fail fast "
+                            "with an explicit reason")
         if failures:
             for f_ in failures:
                 print(f"FAIL: {f_}", file=sys.stderr)

@@ -267,6 +267,98 @@ def bench_resume() -> dict:
     }
 
 
+def bench_compaction(cells_target: int = 10000,
+                     segment_size: int = 8) -> dict:
+    """Journal-compaction probe (docs/robustness.md#journal-segments):
+    a >= ``cells_target``-cell journaled sweep over many derived
+    machine models is killed mid-run, resumed through at least one
+    compaction cycle, and must come back bit-identical with zero
+    re-dispatch of journaled groups while the journal keeps
+    O(segments) live files instead of O(records).
+
+    The grid is wide, not deep: kernel-name aliases share two unique
+    kernel texts and the derived machines share the base model's
+    tables, so the engine's dedupe keeps the compute bounded — the
+    probe measures journal mechanics at 10k-cell scale, not the
+    simulator."""
+    import tempfile
+
+    from repro.core import (AnalysisService, FaultPlan, FaultSpec,
+                            get_model)
+    from repro.core import paper_kernels as pk
+    from repro.core.faults import FaultAbort
+    from repro.core.journal import SweepJournal
+
+    n_machines = 25
+    kill_after = n_machines // 2
+    base = get_model("skl")
+    texts = [pk.TRIAD_SKL_O3, pk.PI_O2]
+    n_names = -(-cells_target // n_machines)
+    kernels = {f"k{i:04d}": texts[i % len(texts)]
+               for i in range(n_names)}
+
+    def service(**kw):
+        svc = AnalysisService(sim_backend="numpy", **kw)
+        archs = tuple(svc.register(base.derive(f"skl_v{i:03d}"))
+                      for i in range(n_machines))
+        return svc, archs
+
+    sweep_kw = dict(schedulers=("uniform",), mode="simulate",
+                    backend="numpy")
+
+    svc_ref, archs = service()
+    t0 = time.perf_counter()
+    reference = svc_ref.sweep(kernels, archs=archs, **sweep_kw)
+    ref_dt = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as td:
+        # simulated SIGKILL after kill_after machine groups journaled
+        plan = FaultPlan(specs=(
+            FaultSpec(point="engine.dispatch", mode="abort",
+                      skip=kill_after),))
+        svc_kill, archs_k = service(faults=plan)
+        aborted = False
+        try:
+            svc_kill.sweep(kernels, archs=archs_k, journal=td,
+                           journal_segment_size=segment_size, **sweep_kw)
+        except FaultAbort:
+            aborted = True
+        mid = SweepJournal(td).stats()
+        svc_res, archs_r = service()
+        t1 = time.perf_counter()
+        resumed = svc_res.sweep(kernels, archs=archs_r, journal=td,
+                                resume_from=td,
+                                journal_segment_size=segment_size,
+                                **sweep_kw)
+        resume_dt = time.perf_counter() - t1
+        final = SweepJournal(td).stats()
+
+    identical = (set(resumed) == set(reference) and all(
+        (resumed[k].predicted_cycles, resumed[k].bound_sim,
+         resumed[k].binding)
+        == (reference[k].predicted_cycles, reference[k].bound_sim,
+            reference[k].binding)
+        for k in reference))
+    s = svc_res.stats
+    return {
+        "cells": len(reference),
+        "machine_groups": n_machines,
+        "segment_size": segment_size,
+        "aborted_mid_sweep": aborted,
+        "journal_hits": s.journal_hits,
+        "group_dispatches_on_resume": s.sim_group_dispatches,
+        "resume_bit_identical": identical,
+        "journal_at_kill": mid,
+        "journal_final": final,
+        "engine_journal_stats": {
+            "records": s.journal_records,
+            "segments": s.journal_segments,
+            "bytes": s.journal_bytes},
+        "reference_seconds": round(ref_dt, 4),
+        "resume_seconds": round(resume_dt, 4),
+    }
+
+
 def run_bench(fast: bool = False) -> dict:
     from repro.core.sim import AUTO_JIT_MIN_BATCH, JIT_SHARD, has_jax
 
@@ -282,6 +374,7 @@ def run_bench(fast: bool = False) -> dict:
         "batches": bench_batches(batches, repeats=1 if fast else 2),
         "sweep": bench_sweep(256 if fast else 1024),
         "resume": bench_resume(),
+        "compaction": bench_compaction(),
     }
     gate_rows = [r for r in report["batches"]
                  if r["batch"] >= 64 and "jit" in r["backends"]]
@@ -321,6 +414,25 @@ def run_bench(fast: bool = False) -> dict:
             report["resume"]["journal_hits"] >= 1
             and report["resume"]["group_dispatches_on_resume"]
             + report["resume"]["journal_hits"] == 2),
+        # a killed 10k-cell journaled sweep must resume bit-identical
+        # through at least one compaction cycle, with zero re-dispatch
+        # of journaled groups and a live file count bounded by the
+        # segment size (docs/robustness.md#journal-segments)
+        "compaction_bit_identical": (
+            report["compaction"]["resume_bit_identical"]
+            and report["compaction"]["aborted_mid_sweep"]
+            and report["compaction"]["cells"] >= 10000),
+        "compaction_zero_redispatch": (
+            report["compaction"]["journal_hits"] >= 1
+            and report["compaction"]["journal_hits"]
+            + report["compaction"]["group_dispatches_on_resume"]
+            == report["compaction"]["machine_groups"]),
+        "compaction_files_bounded": (
+            report["compaction"]["journal_final"]["segments"] >= 1
+            and report["compaction"]["journal_final"]["loose_files"]
+            <= report["compaction"]["segment_size"]
+            and report["compaction"]["journal_final"]["records"]
+            == report["compaction"]["machine_groups"]),
         # an ECM sweep over a warm grid must stay on the planner fast
         # path: zero additional simulations or compiled dispatches
         "ecm_zero_extra_dispatches": (
@@ -370,6 +482,15 @@ def main() -> None:
           f"journal_hits={rs['journal_hits']}, "
           f"dispatches={rs['group_dispatches_on_resume']}, "
           f"bit_identical={rs['resume_bit_identical']}")
+    cp = report["compaction"]
+    print(f"compaction: {cp['cells']} cells over "
+          f"{cp['machine_groups']} machine groups, "
+          f"journal_hits={cp['journal_hits']}, "
+          f"dispatches={cp['group_dispatches_on_resume']}, "
+          f"segments={cp['journal_final']['segments']}, "
+          f"loose={cp['journal_final']['loose_files']} "
+          f"(bound {cp['segment_size']}), "
+          f"bit_identical={cp['resume_bit_identical']}")
     print(f"wrote {args.out}")
     failures = []
     if args.check:
@@ -395,6 +516,16 @@ def main() -> None:
             failures.append("resume re-dispatched a journaled machine "
                             "group (journal replay must cost zero "
                             "dispatches)")
+        if not report["gate"]["compaction_bit_identical"]:
+            failures.append("compacted 10k-cell sweep did not resume "
+                            "bit-identical to an uninterrupted "
+                            "reference")
+        if not report["gate"]["compaction_zero_redispatch"]:
+            failures.append("compacted resume re-dispatched a "
+                            "journaled machine group")
+        if not report["gate"]["compaction_files_bounded"]:
+            failures.append("journal live file count not bounded by "
+                            "the segment size after compaction")
     if failures:
         for f in failures:
             print(f"FAIL: {f}", file=sys.stderr)

@@ -20,6 +20,7 @@ Fault-tolerance properties required at 1000-node scale:
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -33,20 +34,38 @@ import numpy as np
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 _REC_RE = re.compile(r"^rec_(\d+)\.json$")
+_SEG_RE = re.compile(r"^seg_(\d+)_(\d+)\.json$")
 
 
 class RecordJournal:
-    """Append-only, crash-safe JSON record log.
+    """Append-only, crash-safe JSON record log with segment compaction.
 
     One file per record (``rec_00000001.json``), written with the same
     tmp + rename discipline as the checkpoint store: a writer killed
     mid-append never leaves a partial record visible, and readers only
     ever see complete records.  Used by ``AnalysisService.sweep`` to
     journal completed machine-group results so a killed sweep resumes
-    with zero re-dispatch (docs/robustness.md)."""
+    with zero re-dispatch (docs/robustness.md).
 
-    def __init__(self, root: str):
+    **Compaction** (``segment_size=``): once the loose-file count
+    reaches the threshold, :meth:`compact` merges them into one sealed
+    segment ``seg_<first>_<last>.json`` — the JSON body followed by a
+    sha256 footer over the body, written tmp + fsync + rename — and
+    deletes the loose files, so a million-record journal stays
+    O(segments) files instead of O(records)
+    (docs/robustness.md#journal-segments).  The reader verifies every
+    segment's footer and skips torn/corrupt ones; a crash between
+    sealing and loose-file deletion leaves duplicates whose ids are
+    covered by a sealed segment — they are ignored on read and swept by
+    the next compaction.  ``segment_size=None`` (default) never
+    compacts: the PR 9 one-file-per-record layout, bit-identical."""
+
+    def __init__(self, root: str, segment_size: int | None = None):
+        if segment_size is not None and segment_size < 1:
+            raise ValueError("segment_size must be >= 1 or None")
         self.root = root
+        self.segment_size = segment_size
+        self.compactions = 0
         os.makedirs(root, exist_ok=True)
         self._lock = threading.Lock()
 
@@ -58,25 +77,123 @@ class RecordJournal:
                 out.append(int(m.group(1)))
         return sorted(out)
 
+    def _segments(self) -> list[tuple[int, int]]:
+        """Sealed segment spans ``(first, last)``, ascending."""
+        out = []
+        for name in os.listdir(self.root):
+            m = _SEG_RE.match(name)
+            if m:
+                out.append((int(m.group(1)), int(m.group(2))))
+        return sorted(out)
+
+    def _sealed_last(self) -> int:
+        segs = self._segments()
+        return segs[-1][1] if segs else 0
+
+    def _read_segment(self, first: int, last: int) -> list[dict] | None:
+        """Records of one sealed segment, or None when the segment is
+        torn/corrupt (footer digest mismatch, truncation, bad JSON)."""
+        path = os.path.join(self.root, f"seg_{first:08d}_{last:08d}.json")
+        try:
+            with open(path) as f:
+                text = f.read()
+            body, _, footer = text.rstrip("\n").rpartition("\n")
+            if not body or footer != hashlib.sha256(
+                    body.encode()).hexdigest():
+                return None
+            seg = json.loads(body)
+            if seg.get("first") != first or seg.get("last") != last:
+                return None
+            return list(seg["records"])
+        except (OSError, ValueError, KeyError, TypeError):
+            return None
+
     def append(self, record: dict) -> int:
-        """Atomically append one JSON record; returns its id."""
+        """Atomically append one JSON record; returns its id.
+
+        With ``segment_size`` set, reaching that many loose files
+        triggers an in-line compaction."""
         with self._lock:
             ids = self._ids()
-            rec_id = (ids[-1] + 1) if ids else 1
+            last = max(ids[-1] if ids else 0, self._sealed_last())
+            rec_id = last + 1
             final = os.path.join(self.root, f"rec_{rec_id:08d}.json")
             tmp = final + ".tmp"
             with open(tmp, "w") as f:
                 json.dump(record, f)
             os.replace(tmp, final)
+            if self.segment_size is not None and \
+                    len(ids) + 1 >= self.segment_size:
+                self._compact_locked()
             return rec_id
 
-    def records(self) -> list[dict]:
-        """All complete records in append order.
+    def compact(self) -> int:
+        """Merge every live loose record into one sealed segment and
+        delete the loose files; returns the number of records sealed
+        (0 = nothing to do).  Safe to call at any time — a crash
+        anywhere in the sequence loses no record (the segment is
+        sealed atomically before any loose file is removed)."""
+        with self._lock:
+            return self._compact_locked()
 
-        Stray ``.tmp`` files (a killed writer) and unparseable files
-        are skipped — crash debris must never poison a resume."""
-        out = []
+    def _compact_locked(self) -> int:
+        sealed_last = self._sealed_last()
+        live: list[tuple[int, dict]] = []
+        debris: list[int] = []
         for rec_id in self._ids():
+            if rec_id <= sealed_last:
+                # duplicate from a crash between seal and delete: its
+                # content is already in a sealed segment
+                debris.append(rec_id)
+                continue
+            path = os.path.join(self.root, f"rec_{rec_id:08d}.json")
+            try:
+                with open(path) as f:
+                    live.append((rec_id, json.load(f)))
+            except (OSError, ValueError):
+                continue
+        if live:
+            first, last = live[0][0], live[-1][0]
+            body = json.dumps({"first": first, "last": last,
+                               "records": [r for _, r in live]})
+            footer = hashlib.sha256(body.encode()).hexdigest()
+            final = os.path.join(self.root,
+                                 f"seg_{first:08d}_{last:08d}.json")
+            tmp = final + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(body + "\n" + footer + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)
+            self.compactions += 1
+        for rec_id, _ in live:
+            debris.append(rec_id)
+        for rec_id in debris:
+            try:
+                os.remove(os.path.join(self.root,
+                                       f"rec_{rec_id:08d}.json"))
+            except OSError:
+                pass
+        return len(live)
+
+    def records(self) -> list[dict]:
+        """All complete records in append order: sealed segments first
+        (span order), then loose records newer than the last seal.
+
+        Stray ``.tmp`` files (a killed writer), unparseable record
+        files and torn segments are skipped — crash debris must never
+        poison a resume.  Loose records whose ids a sealed segment
+        covers are crash-window duplicates and are ignored."""
+        out = []
+        sealed_last = 0
+        for first, last in self._segments():
+            recs = self._read_segment(first, last)
+            if recs is not None:
+                out.extend(recs)
+                sealed_last = max(sealed_last, last)
+        for rec_id in self._ids():
+            if rec_id <= sealed_last:
+                continue
             path = os.path.join(self.root, f"rec_{rec_id:08d}.json")
             try:
                 with open(path) as f:
@@ -85,13 +202,36 @@ class RecordJournal:
                 continue
         return out
 
-    def clear(self) -> None:
-        with self._lock:
-            for rec_id in self._ids():
+    def stats(self) -> dict:
+        """Journal shape: live record count, sealed segment count,
+        loose file count, on-disk bytes, compactions this instance ran."""
+        segs = self._segments()
+        sealed_last = segs[-1][1] if segs else 0
+        n_sealed = 0
+        for first, last in segs:
+            recs = self._read_segment(first, last)
+            if recs is not None:
+                n_sealed += len(recs)
+        loose = [i for i in self._ids() if i > sealed_last]
+        size = 0
+        for name in os.listdir(self.root):
+            if _REC_RE.match(name) or _SEG_RE.match(name):
                 try:
-                    os.remove(os.path.join(self.root, f"rec_{rec_id:08d}.json"))
+                    size += os.path.getsize(os.path.join(self.root, name))
                 except OSError:
                     pass
+        return {"records": n_sealed + len(loose),
+                "segments": len(segs), "loose_files": len(loose),
+                "bytes": size, "compactions": self.compactions}
+
+    def clear(self) -> None:
+        with self._lock:
+            for name in list(os.listdir(self.root)):
+                if _REC_RE.match(name) or _SEG_RE.match(name):
+                    try:
+                        os.remove(os.path.join(self.root, name))
+                    except OSError:
+                        pass
 
 # numpy cannot round-trip ml_dtypes through .npy files (loads as void);
 # store them through a same-width uint view and record the real dtype in

@@ -8,7 +8,7 @@ from .arch.registry import (ArchRegistry, UnknownArchError,
                             default_registry, get_model)
 from .database import E, InstrForm, InstructionDB, widen_double_pumped
 from .degrade import (LADDER, BreakerBoard, BreakerConfig, CircuitBreaker,
-                      validate_sims)
+                      HealthRouter, RoutePlan, RouterConfig, validate_sims)
 from .engine import AnalysisRequest, AnalysisService, default_service
 from .faults import (FaultAbort, FaultInjector, FaultPlan, FaultSpec,
                      InjectedFault, ResultValidationError)
@@ -31,7 +31,8 @@ __all__ = [
     "default_registry", "default_service", "dependency_edges",
     "EcmResult", "extract_kernel", "extract_streams", "FaultAbort",
     "FaultInjector", "FaultPlan", "FaultSpec", "get_model",
-    "InjectedFault", "LADDER", "ResultValidationError", "validate_sims",
+    "HealthRouter", "InjectedFault", "LADDER", "ResultValidationError",
+    "RoutePlan", "RouterConfig", "validate_sims",
     "parse_assembly", "Instruction", "InstructionDB", "InstrForm", "E",
     "LatencyResult", "MachineModel", "MemoryHierarchy",
     "PipelineParams", "PortModel", "predict_traffic", "SimProgram",

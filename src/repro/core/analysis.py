@@ -76,6 +76,10 @@ class AnalysisResult:
     #                                       the requested one failed
     backend_used: str = ""                # fallback rung ("" = as requested)
     fault_trace_id: int = 0               # FaultInjector event id (0 = none)
+    routed_from: str = ""                 # rung the HealthRouter skipped
+    #                                       pre-dispatch ("" = not routed)
+    probe: bool = False                   # answered by a scheduled
+    #                                       half-open probe dispatch
 
     @property
     def cycles_per_source_iteration(self) -> float:

@@ -24,10 +24,19 @@ All clocks are injectable so the chaos suite can step time without
 sleeping.  The :class:`BreakerBoard` keeps a bounded transition log —
 the telemetry that makes breaker opening/half-opening visible in
 ``service.export_stats()``.
+
+:class:`HealthRouter` turns the breakers from *reactive* containment
+into *proactive* routing: instead of attempting a rung and demoting on
+failure, the dispatcher asks the router for a :class:`RoutePlan` first
+— an open rung is skipped before any dispatch is paid, and a rung due
+for a half-open probe gets at most one scheduled probe dispatch per
+cooldown window while all other traffic routes below it
+(docs/robustness.md#health-aware-routing).
 """
 
 from __future__ import annotations
 
+import json
 import math
 import threading
 import time
@@ -37,7 +46,8 @@ from typing import Callable, Sequence
 
 __all__ = [
     "LADDER", "ladder_from", "BreakerConfig", "CircuitBreaker",
-    "BreakerBoard", "validate_sims",
+    "BreakerBoard", "validate_sims", "RouterConfig", "RoutePlan",
+    "HealthRouter",
 ]
 
 # sim rungs, most to least expensive; "analytic" is the implicit floor
@@ -101,6 +111,20 @@ class CircuitBreaker:
         prev, self._state = self._state, state
         if self._on_transition is not None:
             self._on_transition(prev, state, self._clock())
+
+    def peek(self, now: float | None = None) -> str:
+        """Effective state at ``now`` *without* transitioning.
+
+        Unlike :meth:`allow`, this never mutates the breaker, so a
+        routing policy can look before it leaps: ``"closed"`` /
+        ``"half_open"`` / ``"open"`` mirror :attr:`state`, and
+        ``"due_probe"`` reports an open breaker whose cooldown has
+        elapsed — the next :meth:`allow` call would admit one probe."""
+        if self._state == "open":
+            t = self._clock() if now is None else now
+            if t - self._opened_at >= self.config.cooldown_s:
+                return "due_probe"
+        return self._state
 
     def allow(self) -> bool:
         """May a dispatch be attempted on this rung right now?
@@ -178,6 +202,161 @@ class BreakerBoard:
         with self._lock:
             self._breakers.clear()
             self._events.clear()
+
+
+# ----------------------------------------------------------------------
+# health-aware dispatch routing
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class RouterConfig:
+    """Tunables of one :class:`HealthRouter`.
+
+    ``probe_interval_s`` is the minimum spacing between half-open probe
+    dispatches per (machine digest, rung); ``None`` (default) uses the
+    breaker's own cooldown, so at most one probe is scheduled per
+    cooldown window."""
+
+    probe_interval_s: float | None = None
+
+    def __post_init__(self):
+        if self.probe_interval_s is not None and self.probe_interval_s < 0:
+            raise ValueError("probe_interval_s must be >= 0 or None")
+
+    def to_dict(self) -> dict:
+        return {"probe_interval_s": self.probe_interval_s}
+
+    @classmethod
+    def from_dict(cls, d) -> "RouterConfig":
+        return cls(probe_interval_s=d.get("probe_interval_s"))
+
+
+@dataclass(frozen=True)
+class RoutePlan:
+    """One routing decision: the rungs to walk (healthiest first),
+    where the dispatch was routed *from* (``""`` when it starts at the
+    requested rung), and whether the first rung is a scheduled
+    half-open probe.  An empty ``rungs`` means every rung is unhealthy
+    and the group should take the analytic floor without paying a
+    single dispatch."""
+
+    rungs: tuple[str, ...] = ()
+    routed_from: str = ""
+    probe: bool = False
+
+
+class HealthRouter:
+    """Breaker-aware routing policy: pick the healthiest rung *before*
+    dispatch instead of demoting after a failure.
+
+    Serializable (:meth:`to_json` round-trips the policy config; the
+    probe bookkeeping is runtime state) with an injectable clock so the
+    chaos suite can step time.  Thread-safe: the probe ledger is
+    lock-protected.
+
+    Routing semantics per rung, walked healthiest-first from the
+    requested rung down (:func:`ladder_from`):
+
+    * ``closed`` — dispatch here.
+    * ``open`` (cooldown pending) — skip without paying a dispatch.
+    * ``due_probe`` (open, cooldown elapsed) — at most one scheduled
+      probe dispatch per ``probe_interval_s`` window is routed here
+      (``RoutePlan.probe=True``); all other traffic routes below.
+    * ``half_open`` — a probe is already in flight; route below.
+    """
+
+    def __init__(self, config: RouterConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.config = config or RouterConfig()
+        self._clock = clock
+        self._lock = threading.Lock()
+        # (machine digest, rung) -> time of the last scheduled probe
+        self._last_probe: dict[tuple[str, str], float] = {}
+        self.stats = {"plans": 0, "routed": 0, "probes": 0,
+                      "floor_routes": 0}
+
+    # -- serialization (policy config only) ---------------------------
+    def to_dict(self) -> dict:
+        return {"config": self.config.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d, clock: Callable[[], float] = time.monotonic,
+                  ) -> "HealthRouter":
+        return cls(RouterConfig.from_dict(d.get("config", {})),
+                   clock=clock)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str,
+                  clock: Callable[[], float] = time.monotonic,
+                  ) -> "HealthRouter":
+        return cls.from_dict(json.loads(text), clock=clock)
+
+    # -- routing ------------------------------------------------------
+    def _route(self, board: BreakerBoard, digest: str,
+               rungs: Sequence[str], consume: bool) -> RoutePlan:
+        now = self._clock()
+        rungs = tuple(rungs)
+        for i, rung in enumerate(rungs):
+            br = board.breaker(digest, rung)
+            state = br.peek(now)
+            if state == "closed":
+                routed = rungs[0] if i else ""
+                if consume:
+                    with self._lock:
+                        self.stats["plans"] += 1
+                        self.stats["routed"] += bool(routed)
+                return RoutePlan(rungs[i:], routed, False)
+            if state == "due_probe":
+                interval = (self.config.probe_interval_s
+                            if self.config.probe_interval_s is not None
+                            else br.config.cooldown_s)
+                key = (digest, rung)
+                with self._lock:
+                    last = self._last_probe.get(key)
+                    due = last is None or now - last >= interval
+                    if due and consume:
+                        self._last_probe[key] = now
+                        self.stats["plans"] += 1
+                        self.stats["probes"] += 1
+                        self.stats["routed"] += bool(i)
+                if due:
+                    return RoutePlan(rungs[i:], rungs[0] if i else "",
+                                     True)
+            # open / half_open / probe-slot taken: route below
+        if consume:
+            with self._lock:
+                self.stats["plans"] += 1
+                self.stats["floor_routes"] += 1
+        return RoutePlan((), rungs[0] if rungs else "", False)
+
+    def plan(self, board: BreakerBoard, digest: str,
+             rungs: Sequence[str]) -> RoutePlan:
+        """Commit to a routing decision for one dispatch (a returned
+        probe consumes the probe slot for its window)."""
+        return self._route(board, digest, rungs, consume=True)
+
+    def preview(self, board: BreakerBoard, digest: str,
+                rungs: Sequence[str]) -> RoutePlan:
+        """The decision :meth:`plan` *would* make, without consuming a
+        probe slot or touching the stats — the service's pre-dispatch
+        consult (the engine's :meth:`plan` at dispatch time stays the
+        single probe scheduler)."""
+        return self._route(board, digest, rungs, consume=False)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"config": self.config.to_dict(),
+                    "stats": dict(self.stats),
+                    "pending_probes": {f"{d[:12]}/{r}": t for (d, r), t
+                                       in sorted(self._last_probe.items())}}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._last_probe.clear()
+            for k in self.stats:
+                self.stats[k] = 0
 
 
 # ----------------------------------------------------------------------

@@ -41,14 +41,14 @@ import hashlib
 import threading
 import warnings
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Iterable, Mapping, Sequence
 
 from .analysis import AnalysisResult, analyze
 from .arch.registry import ArchRegistry, UnknownArchError, default_registry
 from .database import InstructionDB
-from .degrade import (BreakerBoard, BreakerConfig, ladder_from,
-                      validate_sims)
+from .degrade import (BreakerBoard, BreakerConfig, HealthRouter,
+                      ladder_from, validate_sims)
 from .faults import (FaultAbort, FaultInjector, FaultPlan, InjectedFault,
                      ResultValidationError)
 from .isa import Instruction
@@ -137,9 +137,22 @@ class ServiceStats:
     #                             backend (docs/robustness.md)
     journal_hits: int = 0    # machine groups replayed from a sweep
     #                          journal (zero re-dispatch on resume)
+    journal_records: int = 0    # live records in the last journal used
+    journal_segments: int = 0   # sealed segments in that journal
+    journal_bytes: int = 0      # its on-disk footprint (bytes)
+    rung_attempts: dict = field(default_factory=dict)
+    #                          dispatch attempts actually paid per
+    #                          ladder rung (a breaker-skipped or
+    #                          router-skipped rung never counts here —
+    #                          the routing-probe gate in service_bench)
+    routed_groups: int = 0   # dispatch groups the HealthRouter started
+    #                          below the requested rung
+    probe_dispatches: int = 0   # scheduled half-open probe dispatches
 
     def as_dict(self) -> dict[str, int]:
-        return dict(vars(self))
+        d = dict(vars(self))
+        d["rung_attempts"] = dict(self.rung_attempts)
+        return d
 
     def hit_rate(self, kind: str) -> float:
         """Hit rate in [0, 1] for one counter pair (``"result"``,
@@ -165,7 +178,8 @@ class AnalysisService:
                  registry: ArchRegistry | None = None,
                  sim_backend: str = "auto",
                  faults: "FaultPlan | FaultInjector | None" = None,
-                 breaker_config: BreakerConfig | None = None):
+                 breaker_config: BreakerConfig | None = None,
+                 router: HealthRouter | None = None):
         self._lock = threading.RLock()
         # a private child of the (shared) registry: this service's
         # register() calls shadow the parent without leaking into other
@@ -198,9 +212,15 @@ class AnalysisService:
         #: per-(machine digest x backend) circuit breakers driving the
         #: degradation ladder pallas -> jit -> numpy -> analytic-only
         self.breakers = BreakerBoard(breaker_config)
-        # provenance for sims produced below the requested rung:
-        # sim_key -> (backend_used, degraded, fault event id)
-        self._sim_provenance: dict[tuple, tuple[str, bool, int]] = {}
+        #: breaker-aware routing policy (None = reactive-only PR 9
+        #: behavior, bit-identical: the ladder still demotes on
+        #: failure but never skips a rung pre-dispatch)
+        self.router = router
+        # provenance for sims produced below the requested rung or via
+        # a routed/probe dispatch: sim_key -> (backend_used, degraded,
+        # fault event id, routed_from, probe)
+        self._sim_provenance: dict[tuple, tuple[str, bool, int, str,
+                                                bool]] = {}
         # registry epoch at the last cache fill: a replacing
         # registration anywhere in the layer chain bumps it, and
         # _check_epoch() then drops every arch-keyed cache
@@ -580,6 +600,20 @@ class AnalysisService:
         if sim is None:
             machine = self.resolve_machine(request.arch)
             breaker = self.breakers.breaker(machine.digest, "tick")
+            probe = False
+            if self.router is not None:
+                # tick is its own single-rung ladder: an unhealthy rung
+                # routes straight to the analytic floor with no dispatch
+                route = self.router.plan(self.breakers, machine.digest,
+                                         ("tick",))
+                probe = route.probe
+                if not route.rungs:
+                    with self._lock:
+                        self.stats.degraded_results += 1
+                    return self._analytic_floor(analytic, 0)
+                if probe:
+                    with self._lock:
+                        self.stats.probe_dispatches += 1
             event_id = 0
             try:
                 prog = self._sim_program(request)
@@ -592,6 +626,8 @@ class AnalysisService:
                                      machine=machine.digest)
                 with self._lock:
                     self.stats.sim_runs += 1
+                    self.stats.rung_attempts["tick"] = \
+                        self.stats.rung_attempts.get("tick", 0) + 1
                 sim = simulate(prog)
                 if self.faults is not None:
                     cpi, ev = self.faults.corrupt(
@@ -606,6 +642,9 @@ class AnalysisService:
                 breaker.record_success()
                 with self._lock:
                     self._sim_cache[sim_key] = sim
+                    if probe:
+                        self._sim_provenance[sim_key] = (
+                            "tick", False, 0, "", True)
             except FaultAbort:
                 raise               # simulated process kill: never contained
             except ValueError:
@@ -619,10 +658,14 @@ class AnalysisService:
         res = self._combine_sim(analytic, sim)
         with self._lock:
             prov = self._sim_provenance.get(sim_key)
-        if prov is not None and prov[1]:
-            res = dataclasses.replace(
-                res, degraded=True, backend_used=prov[0],
-                fault_trace_id=prov[2])
+        if prov is not None:
+            if prov[1]:
+                res = dataclasses.replace(
+                    res, degraded=True, backend_used=prov[0],
+                    fault_trace_id=prov[2])
+            if prov[3] or prov[4]:
+                res = dataclasses.replace(
+                    res, routed_from=prov[3], probe=prov[4])
         return res
 
     @staticmethod
@@ -659,8 +702,12 @@ class AnalysisService:
         Walks the sim rungs from ``start`` (``("tick",)`` for the
         small-batch reference loop), skipping rungs whose circuit
         breaker is open, validating every rung's output, and demoting
-        on any contained failure.  Returns ``(sims | None,
-        backend_used, degraded, dispatches, fault event id)`` —
+        on any contained failure.  When a :class:`HealthRouter` is
+        installed it is consulted *before* the walk: rungs with an
+        open breaker are dropped without paying a dispatch and at
+        most one scheduled probe per cooldown window reaches a rung
+        that is due one.  Returns ``(sims | None, backend_used,
+        degraded, dispatches, fault event id, routed_from, probe)`` —
         ``sims is None`` means every rung failed and the group takes
         the analytic floor.  :class:`FaultAbort` (a simulated process
         kill) and ``ValueError`` (a deterministic bad request) are
@@ -670,13 +717,33 @@ class AnalysisService:
         from .sim import simulate, simulate_many
 
         rungs = ("tick",) if small else ladder_from(start)
-        demoted = False
+        routed_from, probe = "", False
+        if self.router is not None:
+            route = self.router.plan(self.breakers, digest, rungs)
+            rungs = route.rungs
+            routed_from, probe = route.routed_from, route.probe
+            with self._lock:
+                if routed_from:
+                    self.stats.routed_groups += 1
+                if probe:
+                    self.stats.probe_dispatches += 1
+        # a dispatch answered below the rung the caller asked for is
+        # degraded provenance, whether the skip happened reactively
+        # (breaker.allow() refused) or proactively (router)
+        demoted = bool(routed_from)
         event_id = 0
         for rung in rungs:
+            # only the first routed rung can be the scheduled probe; if
+            # it does not answer, whatever answers below is not one
+            if rung != rungs[0]:
+                probe = False
             breaker = self.breakers.breaker(digest, rung)
             if not breaker.allow():
                 demoted = True
                 continue
+            with self._lock:
+                self.stats.rung_attempts[rung] = \
+                    self.stats.rung_attempts.get(rung, 0) + 1
             try:
                 if self.faults is not None:
                     self.faults.fire("engine.dispatch", backend=rung,
@@ -705,7 +772,7 @@ class AnalysisService:
                     raise ResultValidationError("; ".join(problems))
                 breaker.record_success()
                 return (sims, rung, demoted, counters["dispatches"],
-                        event_id)
+                        event_id, routed_from, probe)
             except FaultAbort:
                 raise
             except ValueError:
@@ -715,7 +782,8 @@ class AnalysisService:
                 event_id = getattr(exc, "event_id", event_id)
                 demoted = True
                 continue
-        return None, "analytic", True, 0, event_id
+        # the floor answered: nothing dispatched, so no probe either
+        return None, "analytic", True, 0, event_id, routed_from, False
 
     @staticmethod
     def _journal_lookup(session: dict | None, digest: str,
@@ -957,6 +1025,9 @@ class AnalysisService:
             # out on (compile fault or every sim rung exhausted): they
             # get the analytic floor in the combine loop below
             floor_cells: dict[tuple, int] = {}
+            # sim_key -> (routed_from, probe) for floor cells the
+            # router sent straight to the floor (every rung unhealthy)
+            floor_route: dict[tuple, tuple[str, bool]] = {}
             with self._lock:
                 missing = {sk: r for k, r in sim_cells.items()
                            if (sk := sim_keys[k]) not in self._sim_cache}
@@ -995,12 +1066,13 @@ class AnalysisService:
                     if replay is not None:
                         sims, backend_used, degraded, event_id = replay
                         dispatches = 0
+                        routed_from, probe = "", False
                         with self._lock:
                             self.stats.journal_hits += 1
                     else:
                         sims, backend_used, degraded, dispatches, \
-                            event_id = self._run_ladder(
-                                digest, progs, start, small)
+                            event_id, routed_from, probe = \
+                            self._run_ladder(digest, progs, start, small)
                         self._journal_record(_journal, digest, progs,
                                              sims, backend_used, degraded)
                     with self._lock:
@@ -1010,6 +1082,8 @@ class AnalysisService:
                             self.stats.degraded_results += len(sks)
                             for sk in sks:
                                 floor_cells.setdefault(sk, event_id)
+                                if routed_from:
+                                    floor_route[sk] = (routed_from, False)
                             continue
                         if replay is None:
                             self.stats.sim_runs += len(progs)
@@ -1018,9 +1092,11 @@ class AnalysisService:
                             self._sim_cache.setdefault(sk, sim)
                         if degraded:
                             self.stats.degraded_results += len(sks)
+                        if degraded or routed_from or probe:
                             for sk in sks:
                                 self._sim_provenance[sk] = (
-                                    backend_used, True, event_id)
+                                    backend_used, degraded, event_id,
+                                    routed_from, probe)
             # combine analytic base + simulation per cell
             import dataclasses
             for k, req in sim_cells.items():
@@ -1036,6 +1112,10 @@ class AnalysisService:
                         self._analytic_floor(analytic,
                                              floor_cells[sim_keys[k]]),
                         req)
+                    fr = floor_route.get(sim_keys[k])
+                    if fr is not None:
+                        res = dataclasses.replace(
+                            res, routed_from=fr[0], probe=fr[1])
                 elif analytic is None or sim is None:
                     # a concurrent register()/cache_clear() dropped the
                     # cell mid-batch: recompute through the (race-free)
@@ -1044,10 +1124,14 @@ class AnalysisService:
                 else:
                     res = self._apply_ecm(self._combine_sim(analytic, sim),
                                           req)
-                    if prov is not None and prov[1]:
-                        res = dataclasses.replace(
-                            res, degraded=True, backend_used=prov[0],
-                            fault_trace_id=prov[2])
+                    if prov is not None:
+                        if prov[1]:
+                            res = dataclasses.replace(
+                                res, degraded=True, backend_used=prov[0],
+                                fault_trace_id=prov[2])
+                        if prov[3] or prov[4]:
+                            res = dataclasses.replace(
+                                res, routed_from=prov[3], probe=prov[4])
                 with self._lock:
                     self._results.setdefault(k, res)
 
@@ -1108,6 +1192,7 @@ class AnalysisService:
               traffic_model: str = "analytic",
               journal: str | None = None,
               resume_from: str | None = None,
+              journal_segment_size: int | None = None,
               ) -> dict[tuple[str, str, str], AnalysisResult]:
         """Full grid: ``{(kernel_name, arch, scheduler): AnalysisResult}``.
 
@@ -1130,6 +1215,12 @@ class AnalysisService:
         ``resume_from`` replays matching records from such a directory
         so a killed sweep resumes with zero re-dispatch of journaled
         groups and bit-identical output — see docs/robustness.md.
+        ``journal_segment_size`` bounds the journal's live file count:
+        every time that many loose record files accumulate they are
+        folded into one sealed digest-verified segment
+        (docs/robustness.md#journal-segments); the journal's shape
+        after the sweep is surfaced in ``stats.journal_records`` /
+        ``journal_segments`` / ``journal_bytes``.
         """
         unroll_factors = unroll_factors or {}
         names, reqs = [], []
@@ -1149,13 +1240,20 @@ class AnalysisService:
                                backend or self.sim_backend)
             session = {
                 "plan": plan,
-                "writer": SweepJournal(journal)
+                "writer": SweepJournal(journal,
+                                       segment_size=journal_segment_size)
                           if journal is not None else None,
                 "resume": SweepJournal(resume_from).load(plan)
                           if resume_from is not None else {},
             }
         results = self.predict_batch(reqs, parallel=parallel,
                                      backend=backend, _journal=session)
+        if session is not None and session["writer"] is not None:
+            jstats = session["writer"].stats()
+            with self._lock:
+                self.stats.journal_records = jstats["records"]
+                self.stats.journal_segments = jstats["segments"]
+                self.stats.journal_bytes = jstats["bytes"]
         return dict(zip(names, results))
 
     # ------------------------------------------------------------------

@@ -70,12 +70,28 @@ class SweepJournal:
     A group record is keyed ``(machine digest, ordered program
     digests)`` under a plan digest; ``sims`` is ``None`` for a group
     that degraded all the way to the analytic floor (replaying that is
-    what keeps resume bit-identical even under faults)."""
+    what keeps resume bit-identical even under faults).
 
-    def __init__(self, root: str):
+    ``segment_size`` bounds the live loose-file count: reaching it
+    folds the loose records into one sealed, digest-verified segment
+    (see :class:`~repro.checkpoint.store.RecordJournal`), so a
+    million-cell sweep keeps O(segments) journal files.  ``None``
+    (default) never compacts — the PR 9 layout, bit-identical."""
+
+    def __init__(self, root: str, segment_size: int | None = None):
         # local import: repro.checkpoint pulls in jax at module scope
         from ..checkpoint.store import RecordJournal
-        self._journal = RecordJournal(root)
+        self._journal = RecordJournal(root, segment_size=segment_size)
+
+    def compact(self) -> int:
+        """Seal the loose records into a segment now; returns how many
+        were sealed."""
+        return self._journal.compact()
+
+    def stats(self) -> dict:
+        """Record/segment/loose-file counts + on-disk bytes
+        (``RecordJournal.stats``)."""
+        return self._journal.stats()
 
     # -- writer -------------------------------------------------------
     def record_group(self, plan: str, machine_digest: str,

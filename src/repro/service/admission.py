@@ -46,6 +46,12 @@ class TenantPolicy:
     max_in_flight: int = 64         # per-tenant queue-depth ceiling
     rate_per_s: float = float("inf")   # sustained token refill rate
     burst: float = 64.0             # bucket capacity (max burst size)
+    # retry *budget*: how fast this tenant may consume dispatch
+    # retries (a separate bucket from admission, spent by the
+    # dispatcher, not at submit).  inf (default) = unlimited retries,
+    # bit-identical to the pre-budget service
+    retry_rate_per_s: float = float("inf")
+    retry_burst: float = 16.0       # retry bucket capacity
 
 
 @dataclass
@@ -88,6 +94,7 @@ class AdmissionController:
         self.per_tenant = dict(per_tenant or {})
         self.in_flight: dict[str, int] = {}
         self._buckets: dict[str, TokenBucket] = {}
+        self._retry_buckets: dict[str, TokenBucket] = {}
 
     def policy(self, tenant: str) -> TenantPolicy:
         return self.per_tenant.get(tenant, self.default_policy)
@@ -113,6 +120,23 @@ class AdmissionController:
             raise AdmissionError(tenant, "rate",
                                  f"{pol.rate_per_s}/s burst {pol.burst}")
         self.in_flight[tenant] = mine + 1
+
+    def try_retry(self, tenant: str, now: float) -> bool:
+        """Spend one token from the tenant's *retry* budget.
+
+        Unlike :meth:`admit` this never raises — the dispatcher fails
+        the affected requests fast with an explicit reason instead
+        (docs/robustness.md#retry-budgets).  The default policy
+        (``retry_rate_per_s=inf``) always grants, which keeps the
+        budget-off service bit-identical to PR 9."""
+        pol = self.policy(tenant)
+        if pol.retry_rate_per_s == float("inf"):
+            return True     # unlimited: skip the bucket (inf * 0 = nan)
+        bucket = self._retry_buckets.get(tenant)
+        if bucket is None:
+            bucket = TokenBucket(pol.retry_rate_per_s, pol.retry_burst)
+            self._retry_buckets[tenant] = bucket
+        return bucket.try_spend(now)
 
     def release(self, tenant: str) -> None:
         n = self.in_flight.get(tenant, 0)

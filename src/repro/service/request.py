@@ -87,6 +87,10 @@ class ServiceResponse:
     degraded: bool = False
     backend_used: str = ""           # fallback rung ("" = as requested)
     fault_trace_id: int = 0          # FaultInjector event id (0 = none)
+    routed_from: str = ""            # rung the HealthRouter skipped
+    #                                  pre-dispatch ("" = not routed)
+    probe: bool = False              # answered by a scheduled half-open
+    #                                  probe dispatch
 
     @property
     def ok(self) -> bool:
@@ -100,4 +104,6 @@ class ServiceResponse:
             "degraded": bool(getattr(result, "degraded", False)),
             "backend_used": str(getattr(result, "backend_used", "")),
             "fault_trace_id": int(getattr(result, "fault_trace_id", 0)),
+            "routed_from": str(getattr(result, "routed_from", "")),
+            "probe": bool(getattr(result, "probe", False)),
         }

@@ -21,9 +21,16 @@ in-process :class:`~repro.core.engine.AnalysisService` planner:
   time without touching the queue.
 * **Robustness**: per-request deadlines (submit-relative,
   propagated to the dispatcher which skips expired work), per-dispatch
-  timeout with bounded exponential-backoff retries, and a documented
-  cancellation path (cancel the task awaiting :meth:`submit`; the
-  dispatcher notices and drops the request from its cohort).
+  timeout with *governed* retries — capped full-jitter backoff from a
+  seeded RNG, per-tenant retry budgets (exhausted budget fails fast
+  with an explicit reason), sleeps clamped to the tightest remaining
+  request deadline — optional hedged dispatch for straggler cohorts
+  (docs/robustness.md#retry-budgets), a pre-dispatch
+  :class:`~repro.core.degrade.HealthRouter` consult when the engine
+  carries one (docs/robustness.md#health-aware-routing), and a
+  documented cancellation path (cancel the task awaiting
+  :meth:`submit`; the dispatcher notices and drops the request from
+  its cohort).
 * **Observability** (``repro.service.telemetry``): per-stage latency
   histograms, queue-depth/batch-size distributions, per-tenant and
   per-cohort-class counters, trace events — ``export_stats()`` returns
@@ -37,9 +44,11 @@ from __future__ import annotations
 
 import asyncio
 import hashlib
+import random
 from dataclasses import dataclass, field as dc_field
 from typing import Any, Sequence
 
+from repro.core.degrade import LADDER, ladder_from
 from repro.core.engine import AnalysisService
 
 from .admission import AdmissionController, AdmissionError, TenantPolicy
@@ -64,7 +73,17 @@ class ServiceConfig:
     default_timeout_s: float = 60.0     # per-request deadline
     dispatch_timeout_s: float = 60.0    # one engine dispatch attempt
     max_retries: int = 1                # extra dispatch attempts
-    retry_backoff_s: float = 0.05       # doubled per retry
+    retry_backoff_s: float = 0.05       # backoff base, doubled per retry
+    retry_backoff_cap_s: float = 1.0    # backoff ceiling (the doubling
+    #                                     can never sleep longer)
+    retry_seed: int = 0                 # full-jitter RNG seed: replays
+    #                                     are deterministic
+    hedge: bool = False                 # hedged dispatch: after the
+    #                                     hedge delay, race the next
+    #                                     ladder rung against a
+    #                                     straggling primary dispatch
+    hedge_delay_s: float | None = None  # None = p99 of the measured
+    #                                     dispatch histogram
     max_cohort: int = 1024              # split larger cohorts
     cache_entries: int = 4096           # cross-request cache size bound
     cache_ttl_s: float = float("inf")   # cross-request cache TTL
@@ -106,6 +125,9 @@ class PredictionService:
                               ttl_s=self.config.cache_ttl_s,
                               faults=self.engine.faults)
         self.telemetry = Telemetry()
+        # full-jitter backoff RNG: seeded so a replayed fault schedule
+        # produces the same retry timing (docs/robustness.md)
+        self._retry_rng = random.Random(self.config.retry_seed)
         self._queue: asyncio.Queue | None = None
         self._dispatcher: asyncio.Task | None = None
         self._closed = True
@@ -273,11 +295,13 @@ class PredictionService:
                 request=pending.request, error=err))
 
     def _engine_dispatch_fn(self, key: tuple,
-                            sreqs: list[ServiceRequest]):
+                            sreqs: list[ServiceRequest],
+                            backend: str | None = None):
         """The blocking engine call for one cohort (runs on the
-        default executor)."""
+        default executor).  ``backend`` overrides the cohort's batch
+        driver — the routing consult and hedged dispatch use it."""
         if key[0] == "x86":
-            backend = key[3] or self.config.backend
+            backend = backend or key[3] or self.config.backend
             reqs = [s.analysis for s in sreqs]
             return lambda: self.engine.predict_batch(reqs,
                                                      backend=backend)
@@ -288,6 +312,94 @@ class PredictionService:
             texts, ici_links=h0.ici_links, flop_dtype=h0.flop_dtype,
             mode=h0.mode, machine=machine,
             working_set=h0.working_set)
+
+    def _backoff_s(self, attempt: int) -> float:
+        """Full-jitter capped exponential backoff for retry ``attempt``
+        (>= 1): uniform in ``[0, min(cap, base * 2**(attempt-1))]``
+        from the seeded RNG, so retries decorrelate across cohorts but
+        a replay is deterministic and no sleep exceeds the cap."""
+        ceiling = min(self.config.retry_backoff_cap_s,
+                      self.config.retry_backoff_s * (2 ** (attempt - 1)))
+        return self._retry_rng.uniform(0.0, ceiling)
+
+    def _hedge_delay_s(self) -> float:
+        """The straggler threshold for hedged dispatch: configured, or
+        derived from the measured dispatch-latency p99 (hedging only
+        fires for dispatches already slower than ~99% of history)."""
+        if self.config.hedge_delay_s is not None:
+            return self.config.hedge_delay_s
+        p99 = self.telemetry.dispatch.percentile(0.99)
+        return p99 if p99 > 0 else max(self.config.batch_window_s, 0.01)
+
+    def _route_start(self, key: tuple) -> str | None:
+        """Pre-dispatch routing consult for one cohort: the healthiest
+        start rung, or None to dispatch as requested.
+
+        Uses the router's non-consuming :meth:`HealthRouter.preview` —
+        the engine's own ``plan()`` at dispatch time stays the single
+        scheduler of half-open probes, so the service consult can never
+        double-spend a probe slot."""
+        router = self.engine.router
+        if router is None or key[0] != "x86" or key[2] != "simulate":
+            return None
+        requested = key[3] or self.config.backend or self.engine.sim_backend
+        if requested not in LADDER:
+            return None     # "auto"/None resolve on batch size downstream
+        route = router.preview(self.engine.breakers, key[1],
+                               ladder_from(requested))
+        if route.routed_from and route.rungs:
+            return route.rungs[0]
+        return None
+
+    async def _dispatch_attempt(self, key: tuple, fn, hedge_fn):
+        """One governed dispatch attempt, optionally hedged.
+
+        Without a hedge fn this is a plain bounded executor call.  With
+        one, the primary runs alone for the hedge delay; if it is still
+        going, the next-rung duplicate is launched and the first
+        successful result wins — the loser's asyncio future is
+        cancelled (the executor thread runs to completion; its result
+        is discarded) and accounted in cohort-class telemetry."""
+        loop = asyncio.get_running_loop()
+        timeout = self.config.dispatch_timeout_s
+        primary = asyncio.ensure_future(loop.run_in_executor(None, fn))
+        if hedge_fn is None:
+            return await asyncio.wait_for(primary, timeout)
+        cls = self.telemetry.cohort_class(key)
+        t0 = loop.time()
+        done, _ = await asyncio.wait(
+            {primary}, timeout=min(self._hedge_delay_s(), timeout))
+        if primary in done:
+            return primary.result()
+        cls.hedges += 1
+        self.telemetry.trace("hedge", cohort=class_name(key))
+        hedge = asyncio.ensure_future(
+            loop.run_in_executor(None, hedge_fn))
+        tasks = {primary, hedge}
+        last_exc: BaseException | None = None
+        while tasks:
+            remaining = timeout - (loop.time() - t0)
+            if remaining <= 0:
+                break
+            done, tasks = await asyncio.wait(
+                tasks, timeout=remaining,
+                return_when=asyncio.FIRST_COMPLETED)
+            if not done:
+                break
+            for t in done:
+                if t.exception() is None:
+                    for loser in tasks:
+                        loser.cancel()
+                    if t is hedge:
+                        cls.hedge_wins += 1
+                    return t.result()
+                last_exc = t.exception()
+        if tasks:       # timed out with dispatches still in flight
+            for t in tasks:
+                t.cancel()
+            raise asyncio.TimeoutError
+        assert last_exc is not None     # both completed, both failed
+        raise last_exc
 
     async def _dispatch_cohort(self, key: tuple,
                                pendings: list["_Pending"],
@@ -309,25 +421,70 @@ class PredictionService:
         cls = self.telemetry.cohort_class(key)
         cls.requests += len(live)
         self.telemetry.batch_size.observe(float(len(live)))
+        # breaker-aware routing consult: where will this cohort start?
+        # The consult is a pure preview — the engine's own plan() at
+        # dispatch time performs the actual skip (and emits the
+        # routed_from/probe provenance); the service records the
+        # decision in telemetry and picks the hedge rung from it.
+        start = self._route_start(key)
+        if start is not None:
+            cls.routed += 1
+            self.telemetry.trace("routed", cohort=class_name(key),
+                                 start=start)
+        hedge_fn = None
+        if self.config.hedge and key[0] == "x86" and key[2] == "simulate":
+            healthiest = start or key[3] or self.config.backend \
+                or self.engine.sim_backend
+            rungs = ladder_from(healthiest) if healthiest in LADDER else ()
+            if len(rungs) > 1:
+                hedge_fn = self._engine_dispatch_fn(
+                    key, [p.request for p in live], backend=rungs[1])
         fn = self._engine_dispatch_fn(key, [p.request for p in live])
         stats = self.engine.stats
         before = (stats.sim_group_dispatches, stats.sim_runs,
                   stats.hlo_misses)
-        backoff = self.config.retry_backoff_s
         err: BaseException | None = None
         results = None
         t0 = loop.time()
         for attempt in range(1 + self.config.max_retries):
             if attempt:
+                # per-tenant retry budget: a tenant out of budget fails
+                # fast instead of amplifying a failing backend's load
+                now_b = loop.time()
+                granted: list[_Pending] = []
+                for p in live:
+                    if self.admission.try_retry(p.request.tenant, now_b):
+                        granted.append(p)
+                    else:
+                        tc = self.telemetry.tenant(p.request.tenant)
+                        tc.retry_budget_exhausted += 1
+                        self.telemetry.trace(
+                            "retry_budget_exhausted",
+                            tenant=p.request.tenant,
+                            cohort=class_name(key))
+                        self._finalize_error(p, DispatchError(
+                            "retry budget exhausted for tenant "
+                            f"{p.request.tenant!r} (fail-fast; see "
+                            "TenantPolicy.retry_rate_per_s)"))
+                if len(granted) != len(live):
+                    live = granted
+                    if not live:
+                        return
+                    fn = self._engine_dispatch_fn(
+                        key, [p.request for p in live])
                 cls.retries += 1
                 self.telemetry.trace("retry", cohort=class_name(key),
                                      attempt=attempt)
-                await asyncio.sleep(backoff)
-                backoff *= 2
+                # deadline-aware jittered sleep: never sleep past any
+                # live request's remaining deadline
+                sleep = self._backoff_s(attempt)
+                sleep = max(0.0, min(
+                    sleep, min(p.deadline for p in live) - loop.time()))
+                self.telemetry.retry_sleep.observe(sleep)
+                if sleep > 0:
+                    await asyncio.sleep(sleep)
             try:
-                results = await asyncio.wait_for(
-                    loop.run_in_executor(None, fn),
-                    self.config.dispatch_timeout_s)
+                results = await self._dispatch_attempt(key, fn, hedge_fn)
                 err = None
                 break
             except asyncio.TimeoutError as e:
@@ -391,6 +548,10 @@ class PredictionService:
         out["breakers"] = self.engine.breakers.snapshot()
         out["faults"] = (self.engine.faults.summary()
                          if self.engine.faults is not None else None)
+        # routing-policy state: plan/probe/floor counts + pending
+        # probe windows (None when the engine has no router installed)
+        out["router"] = (self.engine.router.snapshot()
+                         if self.engine.router is not None else None)
         return out
 
     def slo_model(self) -> SloModel:

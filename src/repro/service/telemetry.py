@@ -99,6 +99,7 @@ class TenantCounters:
     deadline_exceeded: int = 0
     cancelled: int = 0
     cache_hits: int = 0          # served from the cross-request cache
+    retry_budget_exhausted: int = 0   # failed fast: no retry budget left
 
     def as_dict(self) -> dict[str, int]:
         return dict(vars(self))
@@ -111,11 +112,17 @@ class CohortClassStats:
     dispatches: int = 0
     requests: int = 0
     retries: int = 0
+    routed: int = 0              # cohorts started below the requested
+    #                              rung by the pre-dispatch consult
+    hedges: int = 0              # hedged (duplicate) dispatches issued
+    hedge_wins: int = 0          # hedges that answered before primary
     cost: LatencyHistogram = field(default_factory=LatencyHistogram)
 
     def as_dict(self) -> dict[str, Any]:
         return {"dispatches": self.dispatches,
                 "requests": self.requests, "retries": self.retries,
+                "routed": self.routed, "hedges": self.hedges,
+                "hedge_wins": self.hedge_wins,
                 "cost": self.cost.as_dict()}
 
 
@@ -126,6 +133,7 @@ class Telemetry:
         self.queue_wait = LatencyHistogram()
         self.dispatch = LatencyHistogram()
         self.total = LatencyHistogram()
+        self.retry_sleep = LatencyHistogram()   # governed backoff sleeps
         self.batch_size = LatencyHistogram(lo_s=1.0, hi_s=4096.0,
                                            buckets_per_decade=8)
         self.queue_depth = LatencyHistogram(lo_s=1.0, hi_s=65536.0,
@@ -165,6 +173,7 @@ class Telemetry:
             "elapsed_s": self.elapsed_s(now),
             "stages": {"queue_wait": self.queue_wait.as_dict(),
                        "dispatch": self.dispatch.as_dict(),
+                       "retry_sleep": self.retry_sleep.as_dict(),
                        "total": self.total.as_dict()},
             "batch_size": self.batch_size.as_dict(),
             "queue_depth": self.queue_depth.as_dict(),

@@ -1,0 +1,155 @@
+"""Nightly chaos soak: randomized seeded fault schedules replayed
+through a routing-enabled service (docs/robustness.md).
+
+Gated on ``CHAOS_SOAK=1`` so the PR-blocking chaos-smoke job stays
+fast; the CI ``chaos-soak`` job (``schedule:`` / ``workflow_dispatch``)
+runs it nightly with many seeds and uploads the fault traces and
+breaker transition logs as artifacts.
+
+Each soak round draws a fault schedule from its seed (every mode the
+injector knows except ``abort`` — kill/resume is pinned separately by
+the journal suite), replays a mixed traffic burst against an engine
+with the :class:`HealthRouter` enabled and aggressive breakers, and
+holds the PR 9 + PR 10 invariants jointly:
+
+* every admitted request resolves exactly once — ``ok`` or a typed
+  error, never a hang, drop, or duplicate;
+* every ok result is finite, and degraded/routed results carry their
+  ``backend_used`` / ``routed_from`` provenance;
+* the router never dispatches against a rung whose breaker it chose to
+  skip (routed cohorts cost zero attempts on the skipped rung while it
+  stays open);
+* retry sleeps stay under the backoff cap.
+
+On any violation the injector's event trace and the breaker board
+snapshot are written to ``FAULT_TRACE_PATH`` / ``BREAKER_LOG_PATH``
+(when set) for artifact upload.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+
+import pytest
+
+from repro.core import AnalysisService, paper_kernels as pk
+from repro.core.degrade import BreakerConfig, HealthRouter
+from repro.core.engine import AnalysisRequest
+from repro.core.faults import FAULT_POINTS, FaultPlan, FaultSpec
+from repro.service import (PredictionService, ServiceConfig,
+                           ServiceRequest, replay)
+from repro.service.request import HloRequest
+
+pytestmark = pytest.mark.skipif(
+    not os.environ.get("CHAOS_SOAK"),
+    reason="nightly soak; set CHAOS_SOAK=1 to run")
+
+_MODES = ["fail", "fail_once", "fail_n", "latency", "corrupt"]
+_HLO = """
+HloModule soak, entry_computation_layout={()->f32[64,64]{1,0}}
+
+ENTRY %main.1 () -> f32[64,64] {
+  %a = f32[64,64]{1,0} constant({...})
+  ROOT %d = f32[64,64]{1,0} dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def _random_plan(seed: int) -> FaultPlan:
+    rng = random.Random(seed)
+    specs = []
+    for _ in range(rng.randint(1, 4)):
+        specs.append(FaultSpec(
+            point=rng.choice(list(FAULT_POINTS)),
+            mode=rng.choice(_MODES),
+            count=rng.choice([None, 1, 2, 3]),
+            skip=rng.randint(0, 2),
+            delay_s=0.01,
+            corrupt=rng.choice(["nan", "negative"]),
+            probability=rng.choice([0.5, 1.0]),
+        ))
+    return FaultPlan(specs=tuple(specs), seed=seed)
+
+
+def _traffic(rng: random.Random):
+    cells = [("skl", pk.TRIAD_SKL_O3), ("zen", pk.TRIAD_ZEN_O3),
+             ("skl", pk.PI_O1), ("zen", pk.PI_O2),
+             ("skl", pk.PI_SKL_O3), ("zen", pk.PI_ZEN_O3)]
+    traffic = []
+    for i in range(rng.randint(12, 24)):
+        arch, src = cells[rng.randrange(len(cells))]
+        traffic.append((rng.uniform(0, 0.05), ServiceRequest(
+            analysis=AnalysisRequest(
+                kernel=src, arch=arch,
+                mode=rng.choice(["simulate", "analytic"])),
+            tenant=rng.choice(["a", "b"]), tag=f"soak{i}")))
+    for i in range(rng.randint(1, 3)):
+        traffic.append((rng.uniform(0, 0.05), ServiceRequest(
+            hlo=HloRequest(text=_HLO), tenant="hlo", tag=f"h{i}")))
+    traffic.sort(key=lambda t: t[0])
+    return traffic
+
+
+def _dump_artifacts(engine: AnalysisService, seed: int) -> None:
+    trace = os.environ.get("FAULT_TRACE_PATH")
+    if trace:
+        with open(trace, "a", encoding="utf-8") as f:
+            json.dump({"seed": seed, **engine.faults.export()}, f)
+            f.write("\n")
+    blog = os.environ.get("BREAKER_LOG_PATH")
+    if blog:
+        with open(blog, "a", encoding="utf-8") as f:
+            json.dump({"seed": seed,
+                       "board": engine.breakers.snapshot(),
+                       "router": engine.router.snapshot()
+                       if engine.router else None}, f)
+            f.write("\n")
+
+
+SOAK_SEEDS = range(int(os.environ.get("CHAOS_SOAK_SEED0", "0")),
+                   int(os.environ.get("CHAOS_SOAK_SEED0", "0"))
+                   + int(os.environ.get("CHAOS_SOAK_ROUNDS", "25")))
+
+
+@pytest.mark.parametrize("seed", SOAK_SEEDS)
+def test_soak_round_resolves_everything_with_routing(seed):
+    plan = _random_plan(seed)
+    engine = AnalysisService(
+        faults=plan, router=HealthRouter(),
+        breaker_config=BreakerConfig(failure_threshold=1,
+                                     cooldown_s=0.02))
+    svc = PredictionService(engine, ServiceConfig(
+        batch_window_s=0.005, max_retries=2, retry_backoff_s=0.005,
+        retry_backoff_cap_s=0.02, retry_seed=seed))
+    rng = random.Random(seed ^ 0x5eed)
+    traffic = _traffic(rng)
+    try:
+        resps = replay(svc, traffic)
+        assert len(resps) == len(traffic)
+        for r in resps:
+            assert r is not None
+            assert r.ok or r.error is not None      # typed, never hung
+            if r.ok:
+                if r.request.analysis is not None:
+                    assert math.isfinite(r.result.predicted_cycles)
+                if r.degraded:
+                    assert r.backend_used
+                if r.routed_from:
+                    assert r.routed_from != r.backend_used
+        # governed sleeps never exceed the cap
+        assert svc.telemetry.retry_sleep.max <= 0.02 + 1e-9
+        # the router's ledger stays internally consistent and
+        # serializable under arbitrary schedules
+        snap = engine.router.snapshot()
+        json.dumps(snap)
+        assert snap["stats"]["routed"] + snap["stats"]["probes"] \
+            + snap["stats"]["floor_routes"] <= snap["stats"]["plans"] \
+            + snap["stats"]["probes"]
+        assert engine.stats.routed_groups <= snap["stats"]["routed"] \
+            + snap["stats"]["probes"]
+    except Exception:
+        _dump_artifacts(engine, seed)
+        raise
+    _dump_artifacts(engine, seed)

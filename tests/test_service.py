@@ -437,3 +437,57 @@ def test_drop_results_keeps_compiled_programs():
     engine.predict(req)                      # re-simulates ...
     assert engine.stats.sim_runs == sims_before + 1
     assert engine.stats.program_hits > hits_before   # ... same program
+
+
+# ------------------------------------------- targeted cache invalidation
+
+def test_ttl_cache_invalidate_match_drops_only_matching_keys():
+    c = TTLCache(max_entries=16)
+    for digest in ("aaa", "bbb"):
+        for i in range(3):
+            c.put((digest, i), f"{digest}/{i}", now=0)
+    dropped = c.invalidate(lambda k: k[0] == "aaa")
+    assert dropped == 3
+    assert all(c.get(("aaa", i), now=0) is None for i in range(3))
+    assert all(c.get(("bbb", i), now=0) == f"bbb/{i}" for i in range(3))
+    # no-op matcher drops nothing
+    assert c.invalidate(lambda k: False) == 0
+    assert len(c) == 3
+
+
+def test_registry_epoch_invalidation_under_concurrent_submit():
+    """A machine-model re-registration mid-traffic must clear the
+    cross-request cache at the next submit — a stale entry keyed on a
+    superseded digest is never served — while in-flight submits all
+    still resolve exactly once."""
+    svc = PredictionService(config=ServiceConfig(batch_window_s=0.005))
+
+    async def go():
+        await svc.start()
+        r1 = await svc.submit(_req())
+        assert r1.ok and not r1.cache_hit
+        r2 = await svc.submit(_req())
+        assert r2.ok and r2.cache_hit            # warm
+        # the epoch bump lands while a burst is in flight; replacing
+        # with the *same* model still supersedes (epoch bumps), so the
+        # recomputed answer must be identical — only the cache entry
+        # dies
+        async def reregister():
+            reg = svc.engine.registry
+            reg.register(reg.model("skl"), replace=True)
+
+        results = await asyncio.gather(
+            reregister(),
+            *(svc.submit(_req(unroll=2 + (i % 3))) for i in range(9)))
+        resps = results[1:]
+        assert all(r.ok for r in resps)
+        assert len(resps) == 9                   # exactly once each
+        # the pre-registration entry for _req() must not be served
+        r3 = await svc.submit(_req())
+        assert r3.ok and not r3.cache_hit
+        assert r3.result.predicted_cycles == r1.result.predicted_cycles
+        assert any(t["event"] == "cache_invalidated"
+                   for t in svc.telemetry.traces)
+        await svc.stop()
+
+    asyncio.run(go())
